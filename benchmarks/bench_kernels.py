@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks (CPU): pure-jnp production paths vs the
+interpret-mode Pallas kernels + correctness deltas vs the oracles.
+Interpret mode measures correctness, not TPU speed — the derived field
+carries the max-abs error, which is the signal that matters here."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models.attention import chunked_attention
+from repro.models.ssm import ssd_chunked
+
+
+def _timeit(fn, n=5):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd = 2, 512, 4, 64
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    expect = ref.attention_ref(q, k, v, causal=True)
+
+    us = _timeit(lambda: chunked_attention(q, k, v, chunk=128, causal=True))
+    err = float(jnp.abs(chunked_attention(q, k, v, chunk=128) - expect).max())
+    rows.append(row("kernel_attn_jnp_chunked_512", us, f"max_err={err:.2e}"))
+
+    us = _timeit(lambda: flash_attention(q, k, v, causal=True,
+                                         interpret=True), n=2)
+    err = float(jnp.abs(flash_attention(q, k, v, interpret=True) - expect).max())
+    rows.append(row("kernel_attn_pallas_interpret_512", us,
+                    f"max_err={err:.2e};note=interpret-mode-correctness"))
+
+    b, s, h, p, n = 2, 256, 4, 16, 32
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    y_ref, st_ref = ref.ssd_ref(x, dt, A, Bm, Cm)
+
+    us = _timeit(lambda: ssd_chunked(x, dt, A, Bm, Cm, 64))
+    err = float(jnp.abs(ssd_chunked(x, dt, A, Bm, Cm, 64)[0] - y_ref).max())
+    rows.append(row("kernel_ssd_jnp_chunked_256", us, f"max_err={err:.2e}"))
+
+    us = _timeit(lambda: ssd_scan(x, dt, A, Bm, Cm, chunk=64,
+                                  interpret=True), n=2)
+    err = float(jnp.abs(ssd_scan(x, dt, A, Bm, Cm, chunk=64,
+                                 interpret=True)[0] - y_ref).max())
+    rows.append(row("kernel_ssd_pallas_interpret_256", us,
+                    f"max_err={err:.2e};note=interpret-mode-correctness"))
+    return rows

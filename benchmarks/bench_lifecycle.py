@@ -1,0 +1,38 @@
+"""Paper Fig 8 + §5.3 totals: average workflow lifecycle over 100
+consecutive runs per engine per workflow (the paper's exact protocol —
+the virtual clock makes 100 runs take milliseconds of wall time)."""
+import time
+
+from benchmarks.common import ALL_WF, ENGINES, PAPER, row, wf
+from repro.core.runner import run_experiment
+
+REPEATS = 100
+
+
+def run():
+    rows = []
+    for name in ALL_WF:
+        w = wf(name)
+        life, total = {}, {}
+        wall = 0.0
+        for eng in ENGINES:
+            t0 = time.perf_counter()
+            res = run_experiment(eng, w, repeats=REPEATS, seed=3)
+            wall += (time.perf_counter() - t0) * 1e6
+            life[eng] = res.metrics.avg_lifecycle(name)
+            total[eng] = res.metrics.total_time(name)
+        red = 1 - life["kubeadaptor"] / life["argo"]
+        p = PAPER["lifecycle"][name]
+        rows.append(row(
+            f"fig8_lifecycle_{name}", wall / len(ENGINES),
+            f"kube_s={life['kubeadaptor']:.2f};batch_s={life['batchjob']:.2f};"
+            f"argo_s={life['argo']:.2f};paper={p['kubeadaptor']}/"
+            f"{p['batchjob']}/{p['argo']};reduction_vs_argo={red:.4f};"
+            f"paper_reduction={PAPER['lifecycle_reduction_vs_argo'][name]}"))
+        pt = PAPER["total_100_runs"][name]
+        rows.append(row(
+            f"sec53_total_100runs_{name}", wall / len(ENGINES),
+            f"kube_s={total['kubeadaptor']:.0f};batch_s={total['batchjob']:.0f};"
+            f"argo_s={total['argo']:.0f};paper={pt['kubeadaptor']:.0f}/"
+            f"{pt['batchjob']:.0f}/{pt['argo']:.0f}"))
+    return rows

@@ -1,0 +1,46 @@
+"""Paper Figs 9-14: CPU/memory usage-rate curves + first-lifecycle
+averages. Dumps the full 0.5s-sampled series (the Fig 9/10 curves) to
+artifacts/resource_usage/ and reports the Fig 13/14 averages."""
+import json
+import time
+from pathlib import Path
+
+from benchmarks.common import ALL_WF, ENGINES, row, wf
+from repro.core.runner import run_experiment
+
+REPEATS = 20
+OUT = Path("artifacts/resource_usage")
+
+
+def run():
+    rows = []
+    OUT.mkdir(parents=True, exist_ok=True)
+    for name in ALL_WF:
+        w = wf(name)
+        rates = {}
+        peaks = {}
+        wall = 0.0
+        for eng in ENGINES:
+            t0 = time.perf_counter()
+            res = run_experiment(eng, w, repeats=REPEATS, seed=6)
+            wall += (time.perf_counter() - t0) * 1e6
+            rates[eng] = res.metrics.first_lifecycle_usage(name)
+            cpu_peak = max((c for _, c, _ in res.metrics.samples), default=0)
+            mem_peak = max((m for _, _, m in res.metrics.samples), default=0)
+            peaks[eng] = (cpu_peak, mem_peak)
+            series = [{"t": t, "cpu_m": c, "mem_mi": m}
+                      for t, c, m in res.metrics.samples[:2000]]
+            (OUT / f"{name}_{eng}.json").write_text(json.dumps(series))
+        k, b, a = rates["kubeadaptor"], rates["batchjob"], rates["argo"]
+        rows.append(row(
+            f"fig13_cpu_usage_rate_{name}", wall / len(ENGINES),
+            f"kube={k[0]:.4f};batch={b[0]:.4f};argo={a[0]:.4f};"
+            f"ordering_ok={k[0] > b[0] > a[0]}"))
+        rows.append(row(
+            f"fig14_mem_usage_rate_{name}", wall / len(ENGINES),
+            f"kube={k[1]:.4f};batch={b[1]:.4f};argo={a[1]:.4f}"))
+        rows.append(row(
+            f"fig9_10_peak_usage_{name}", wall / len(ENGINES),
+            f"cpu_peak_m={peaks['kubeadaptor'][0]};"
+            f"mem_peak_mi={peaks['kubeadaptor'][1]};allocatable=48000m/91872Mi"))
+    return rows

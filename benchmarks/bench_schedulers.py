@@ -1,0 +1,67 @@
+"""Two-level scheme in action: swap the level-1 scheduling algorithm and
+verify the level-2 execution follows it (the docking framework is
+algorithm-agnostic — §4.1). Longest-path-first shortens makespan on a
+resource-CONSTRAINED cluster where ready tasks must queue."""
+import time
+
+from benchmarks.common import row
+from repro.core import calibration as cal
+from repro.core.cluster import Cluster
+from repro.core.dag import Task, Workflow, add_virtual_entry_exit
+from repro.core.engine import KubeAdaptorEngine
+from repro.core.events import EventRegistry
+from repro.core.informer import InformerSet
+from repro.core.injector import WorkflowInjector
+from repro.core.metrics import MetricsCollector
+from repro.core.schedulers import SCHEDULERS
+from repro.core.sim import Sim
+from repro.core.volumes import VolumeManager
+
+
+def _imbalanced_wf() -> Workflow:
+    """One long chain + a wide bush: priority order matters under a
+    2-slot cluster (longest-path should start the chain first)."""
+    tasks = {}
+    for i in range(6):                      # the bush (independent) FIRST —
+        tasks[f"bush{i}"] = Task(id=f"bush{i}", duration_s=10.0)
+    prev = None                             # so plain topological order
+    for i in range(6):                      # schedules it before the chain
+        t = Task(id=f"chain{i}", inputs=[prev] if prev else [],
+                 duration_s=10.0)
+        if prev:
+            tasks[prev].outputs.append(t.id)
+        tasks[t.id] = t
+        prev = t.id
+    return Workflow("imbalanced", add_virtual_entry_exit(tasks))
+
+
+def run():
+    rows = []
+    wf = _imbalanced_wf()
+    small = cal.PaperCluster(n_nodes=1, node_cpu_m=2500, node_mem_mi=4000)
+    results = {}
+    for name, cls in SCHEDULERS.items():
+        t0 = time.perf_counter()
+        sim = Sim()
+        cluster = Cluster(sim, cluster_cfg=small, seed=3)
+        engine = KubeAdaptorEngine(
+            sim, cluster, InformerSet(sim, cluster), EventRegistry(sim),
+            VolumeManager(sim, cluster), MetricsCollector(sim, cluster),
+            scheduler_cls=cls)
+        inj = WorkflowInjector(sim, engine.submit)
+        engine.on_workflow_done = inj.request_next
+        inj.load([wf.with_instance(0)])
+        inj.start()
+        sim.run(until=100_000)
+        rec = engine.metrics.wf_record(wf.with_instance(0))
+        ok = engine.metrics.order_consistent(wf.with_instance(0))
+        results[name] = rec.lifecycle
+        rows.append(row(
+            f"two_level_scheduler_{name}",
+            (time.perf_counter() - t0) * 1e6,
+            f"lifecycle_s={rec.lifecycle:.1f};consistent={ok}"))
+    gain = 1 - results["longest-path"] / results["topological"]
+    rows.append(row("two_level_scheduler_gain", 0.0,
+                    f"longest_path_vs_topo={gain:.3f};"
+                    "note=level-1 algorithm swapped, level-2 docking unchanged"))
+    return rows

@@ -1,0 +1,31 @@
+"""Paper Fig 7: average task-pod execution time, 3 engines x 4 workflows.
+
+The paper's headline: KubeAdaptor 12.82/12.49/12.67/12.84 s and
+24.45/47.57/23.72/24.65 % reductions vs Argo."""
+import time
+
+from benchmarks.common import ALL_WF, ENGINES, PAPER, row, wf
+from repro.core.runner import run_experiment
+
+REPEATS = 20
+
+
+def run():
+    rows = []
+    for name in ALL_WF:
+        w = wf(name)
+        ex = {}
+        wall = 0.0
+        for eng in ENGINES:
+            t0 = time.perf_counter()
+            res = run_experiment(eng, w, repeats=REPEATS, seed=5)
+            wall += (time.perf_counter() - t0) * 1e6
+            ex[eng] = res.metrics.avg_pod_exec_time(name)
+        red = 1 - ex["kubeadaptor"] / ex["argo"]
+        rows.append(row(
+            f"fig7_task_exec_{name}", wall / len(ENGINES),
+            f"kube_s={ex['kubeadaptor']:.2f};batch_s={ex['batchjob']:.2f};"
+            f"argo_s={ex['argo']:.2f};paper_kube_s={PAPER['exec_kube'][name]};"
+            f"reduction_vs_argo={red:.4f};"
+            f"paper_reduction={PAPER['exec_reduction_vs_argo'][name]}"))
+    return rows

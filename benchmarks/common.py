@@ -1,0 +1,42 @@
+"""Shared benchmark helpers."""
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.configs.workflows import WORKFLOWS, get_workflow_spec  # noqa: E402
+from repro.core.dag import make_workflow  # noqa: E402
+
+PAPER = {
+    "lifecycle": {
+        "montage": {"kubeadaptor": 129.85, "batchjob": 169.83, "argo": 229.57},
+        "epigenomics": {"kubeadaptor": 111.12, "batchjob": 162.34, "argo": 197.18},
+        "cybershake": {"kubeadaptor": 83.36, "batchjob": 125.44, "argo": 151.19},
+        "ligo": {"kubeadaptor": 92.46, "batchjob": 143.80, "argo": 181.22},
+    },
+    "exec_kube": {"montage": 12.82, "epigenomics": 12.49,
+                  "cybershake": 12.67, "ligo": 12.84},
+    "exec_reduction_vs_argo": {"montage": 0.2445, "epigenomics": 0.4757,
+                               "cybershake": 0.2372, "ligo": 0.2465},
+    "lifecycle_reduction_vs_argo": {"montage": 0.4344, "epigenomics": 0.4365,
+                                    "cybershake": 0.4486, "ligo": 0.4898},
+    "total_100_runs": {
+        "montage": {"kubeadaptor": 14081.86, "batchjob": 16976.73, "argo": 22942.3},
+        "epigenomics": {"kubeadaptor": 12282.02, "batchjob": 16222.06, "argo": 19712.66},
+        "cybershake": {"kubeadaptor": 9472.07, "batchjob": 12532.18, "argo": 15108.25},
+        "ligo": {"kubeadaptor": 10356.19, "batchjob": 14373.86, "argo": 18117.57},
+    },
+}
+
+ALL_WF = sorted(WORKFLOWS)
+ENGINES = ("kubeadaptor", "batchjob", "argo")
+
+
+def wf(name):
+    return make_workflow(name, get_workflow_spec(name))
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

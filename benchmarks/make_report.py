@@ -1,0 +1,73 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_report
+"""
+import json
+import re
+from pathlib import Path
+
+ART = Path("artifacts/dryrun")
+EXP = Path("EXPERIMENTS.md")
+
+
+def table() -> str:
+    rows = []
+    for p in sorted(ART.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("tag") or d.get("mesh") != "pod16x16":
+            continue
+        if d["status"] == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | — | — | "
+                        f"skipped: full-attention @500k |")
+            continue
+        if d["status"] != "ok":
+            rows.append(f"| {d['arch']} | {d['shape']} | ERROR {d.get('error','')} |")
+            continue
+        r = d["roofline"]
+        ma = d["memory_analysis"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} "
+            f"| {r['compute_s'] * 1e3:.1f} | {r['memory_s'] * 1e3:.1f} "
+            f"| {r['collective_s'] * 1e3:.1f} | {r['dominant'].replace('_s', '')} "
+            f"| {d['useful_flops_ratio']:.3f} | {d['roofline_fraction']:.4f} "
+            f"| {ma['peak_bytes_per_device'] / 1e9:.1f} GB |")
+    hdr = ("| arch | shape | compute ms | memory ms | collective ms | dominant "
+           "| 6ND/HLO | roofline frac | peak/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def variants_table() -> str:
+    rows = []
+    for p in sorted(ART.glob("*__*__pod16x16__*.json")):
+        d = json.loads(p.read_text())
+        if d["status"] != "ok":
+            rows.append(f"| {d['arch']}:{d['shape']} | {d['tag']} | FAILED |")
+            continue
+        r = d["roofline"]
+        ma = d["memory_analysis"]
+        rows.append(
+            f"| {d['arch']}:{d['shape']} | {d['tag']} "
+            f"| {r['compute_s'] * 1e3:.0f} | {r['memory_s'] * 1e3:.0f} "
+            f"| {r['collective_s'] * 1e3:.0f} | {d['roofline_fraction']:.4f} "
+            f"| {ma['peak_bytes_per_device'] / 1e9:.1f} GB |")
+    hdr = ("| cell | variant | compute ms | memory ms | collective ms "
+           "| frac | peak/dev |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def main():
+    text = EXP.read_text()
+    text = re.sub(r"<!-- ROOFLINE_TABLE_BEGIN -->.*?<!-- ROOFLINE_TABLE_END -->",
+                  "<!-- ROOFLINE_TABLE_BEGIN -->\n" + table()
+                  + "\n<!-- ROOFLINE_TABLE_END -->", text, flags=re.S)
+    text = re.sub(r"<!-- VARIANTS_TABLE_BEGIN -->.*?<!-- VARIANTS_TABLE_END -->",
+                  "<!-- VARIANTS_TABLE_BEGIN -->\n" + variants_table()
+                  + "\n<!-- VARIANTS_TABLE_END -->", text, flags=re.S)
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated;",
+          len(list(ART.glob("*.json"))), "artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by `python -m repro.launch.dryrun`)
+and emits, per (arch x shape x mesh): the three roofline terms in
+seconds, the dominant term, MODEL_FLOPS/HLO_FLOPs, and the roofline
+fraction. Missing artifacts are reported, not silently skipped."""
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+ART = Path("artifacts/dryrun")
+
+
+def load_cells(mesh: str = None, tag: str = ""):
+    cells = []
+    if not ART.exists():
+        return cells
+    for p in sorted(ART.glob("*.json")):
+        d = json.loads(p.read_text())
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if (d.get("tag") or "") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run():
+    rows = []
+    cells = load_cells(mesh="pod16x16")
+    if not cells:
+        return [row("roofline_missing", 0.0,
+                    "run: PYTHONPATH=src python -m repro.launch.dryrun "
+                    "--arch all --shape all --mesh both")]
+    n_ok = n_skip = 0
+    for d in cells:
+        name = f"roofline_{d['arch']}__{d['shape']}"
+        if d["status"] == "skipped":
+            n_skip += 1
+            rows.append(row(name, 0.0, "skipped=long_500k-needs-subquadratic"))
+            continue
+        if d["status"] != "ok":
+            rows.append(row(name, 0.0, f"ERROR={d.get('error', '?')}"))
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        rows.append(row(
+            name, d["compile_s"] * 1e6,
+            f"compute_ms={r['compute_s'] * 1e3:.2f};"
+            f"memory_ms={r['memory_s'] * 1e3:.2f};"
+            f"collective_ms={r['collective_s'] * 1e3:.2f};"
+            f"dominant={r['dominant']};"
+            f"useful_ratio={d['useful_flops_ratio']:.3f};"
+            f"roofline_frac={d['roofline_fraction']:.4f};"
+            f"peak_gb_per_dev={d['memory_analysis']['peak_bytes_per_device'] / 1e9:.2f}"))
+    rows.append(row("roofline_summary", 0.0,
+                    f"ok={n_ok};skipped={n_skip};mesh=pod16x16"))
+    multi = [d for d in load_cells(mesh="pod2x16x16") if d["status"] == "ok"]
+    rows.append(row("multipod_dryrun_summary", 0.0,
+                    f"ok={len(multi)};mesh=pod2x16x16;proof=pod-axis-shards"))
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. us_per_call is real wall time
+of the benchmark harness; the paper's (virtual-clock) seconds live in
+the derived field next to the published numbers they reproduce.
+
+  PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_consistency, bench_engine_micro,
+                            bench_kernels, bench_lifecycle,
+                            bench_resource_usage, bench_schedulers,
+                            bench_task_exec, roofline)
+    modules = [
+        ("consistency", bench_consistency),
+        ("task_exec", bench_task_exec),
+        ("lifecycle", bench_lifecycle),
+        ("resource_usage", bench_resource_usage),
+        ("engine_micro", bench_engine_micro),
+        ("schedulers", bench_schedulers),
+        ("kernels", bench_kernels),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failed += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: the KubeAdaptor docking framework."""
+from repro.core.calibration import (DEFAULT_CLUSTER, DEFAULT_PARAMS,
+                                    ClusterParams, PaperCluster)
+from repro.core.cluster import Cluster, PodObj
+from repro.core.dag import Task, Workflow, make_workflow, parse_configmap
+from repro.core.engine import KubeAdaptorEngine
+from repro.core.runner import ENGINES, RunResult, run_experiment
+from repro.core.sim import Sim
+
+__all__ = [
+    "ClusterParams", "PaperCluster", "DEFAULT_PARAMS", "DEFAULT_CLUSTER",
+    "Cluster", "PodObj", "Task", "Workflow", "make_workflow",
+    "parse_configmap", "KubeAdaptorEngine", "ENGINES", "RunResult",
+    "run_experiment", "Sim",
+]

@@ -1,0 +1,339 @@
+"""The level-2 cluster: an apiserver + disordered scheduler analogue.
+
+Faithful to the properties the paper builds on:
+  * the scheduler is DISORDERED, SCATTERED and UNPREDICTABLE (§3.1):
+    each cycle it visits pending pods in random order and scatters them
+    over shuffled nodes first-fit — it knows nothing about task
+    dependencies (Fig 1's problem);
+  * every API interaction costs ``api_latency`` (the apiserver-pressure
+    effect the Informer exists to avoid);
+  * watch streams deliver object events with ``watch_latency``;
+  * pods hold node resources from bind to completion; Succeeded/Failed
+    pods release compute but keep their object until deleted (pressure
+    on anyone who forgets GC, like the paper's baselines).
+
+Payloads: virtual (declared seconds) or real callables whose wall time
+feeds the virtual clock (see core/sim.py).
+"""
+from __future__ import annotations
+
+import copy
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import calibration as cal
+from repro.core.sim import Sim, measure_wall
+
+PENDING, RUNNING, SUCCEEDED, FAILED = "Pending", "Running", "Succeeded", "Failed"
+ADDED, MODIFIED, DELETED = "ADDED", "MODIFIED", "DELETED"
+
+
+@dataclass
+class NodeObj:
+    name: str
+    cpu_alloc: int
+    mem_alloc: int
+    cpu_used: int = 0
+    mem_used: int = 0
+    ready: bool = True
+    slow_factor: float = 1.0          # straggler injection for tests
+
+    def fits(self, cpu: int, mem: int) -> bool:
+        return (self.ready and self.cpu_used + cpu <= self.cpu_alloc
+                and self.mem_used + mem <= self.mem_alloc)
+
+
+@dataclass
+class PodObj:
+    name: str
+    namespace: str
+    task_id: str
+    workflow: str
+    cpu_m: int
+    mem_mi: int
+    duration_s: float = 0.0
+    payload: Optional[Callable[[], Any]] = None
+    volume: Optional[str] = None       # PVC name (mount adds latency)
+    labels: Dict[str, str] = field(default_factory=dict)
+    phase: str = PENDING
+    node: Optional[str] = None
+    created: float = 0.0
+    scheduled: float = -1.0
+    started: float = -1.0
+    finished: float = -1.0
+    deleted: float = -1.0
+    restarts: int = 0
+    _holding: bool = False             # currently holds node resources
+
+
+@dataclass
+class NamespaceObj:
+    name: str
+    created: float = 0.0
+    deleted: float = -1.0
+
+
+@dataclass
+class PVCObj:
+    name: str
+    namespace: str
+    bound: bool = False
+    created: float = 0.0
+
+
+@dataclass
+class WatchEvent:
+    kind: str        # "pod" | "node" | "namespace" | "pvc"
+    type: str        # ADDED | MODIFIED | DELETED
+    obj: Any
+
+
+class Cluster:
+    def __init__(self, sim: Sim, params: cal.ClusterParams = cal.DEFAULT_PARAMS,
+                 cluster_cfg: cal.PaperCluster = cal.DEFAULT_CLUSTER,
+                 payload_mode: str = "virtual", seed: int = 0):
+        self.sim = sim
+        self.p = params
+        self.payload_mode = payload_mode
+        self.rng = random.Random(seed)
+        self.nodes: Dict[str, NodeObj] = {
+            name: NodeObj(name, cpu, mem) for name, cpu, mem in cluster_cfg.nodes()}
+        self.pods: Dict[Tuple[str, str], PodObj] = {}
+        self.namespaces: Dict[str, NamespaceObj] = {}
+        self.pvcs: Dict[Tuple[str, str], PVCObj] = {}
+        self._watchers: Dict[str, List[Callable[[WatchEvent], None]]] = {}
+        self._sched_scheduled = False
+        self.api_calls = 0                   # apiserver pressure counter
+        self.pod_log: List[PodObj] = []      # every pod ever (metrics)
+
+    # ---- watch ---------------------------------------------------------
+    def watch(self, kind: str, cb: Callable[[WatchEvent], None]):
+        self._watchers.setdefault(kind, []).append(cb)
+
+    def _notify(self, kind: str, type_: str, obj: Any):
+        # snapshot the object version at event time (like a real watch
+        # stream's resourceVersion) — consumers must not see later state
+        snap = copy.copy(obj)
+        for cb in self._watchers.get(kind, []):
+            self.sim.after(self.p.watch_latency,
+                           (lambda c=cb, e=WatchEvent(kind, type_, snap): c(e)))
+
+    # ---- namespaces / PVC ----------------------------------------------
+    def create_namespace(self, name: str, cb: Optional[Callable] = None):
+        self.api_calls += 1
+
+        def do():
+            if name not in self.namespaces:
+                ns = NamespaceObj(name, created=self.sim.now())
+                self.namespaces[name] = ns
+                self._notify("namespace", ADDED, ns)
+            if cb:
+                cb(self.namespaces[name])
+
+        self.sim.after(self.p.api_latency + self.p.ns_create_latency, do)
+
+    def delete_namespace(self, name: str, cb: Optional[Callable] = None):
+        self.api_calls += 1
+
+        def do():
+            ns = self.namespaces.pop(name, None)
+            if ns is not None:
+                ns.deleted = self.sim.now()
+                # cascade: pods + pvcs in the namespace
+                for key in [k for k in self.pods if k[0] == name]:
+                    self._remove_pod(self.pods[key])
+                for key in [k for k in self.pvcs if k[0] == name]:
+                    del self.pvcs[key]
+                self._notify("namespace", DELETED, ns)
+            if cb:
+                cb(ns)
+
+        self.sim.after(self.p.api_latency + self.p.ns_delete_latency, do)
+
+    def create_pvc(self, namespace: str, name: str, cb: Optional[Callable] = None):
+        self.api_calls += 1
+
+        def bound():
+            pvc = self.pvcs.get((namespace, name))
+            if pvc is not None:
+                pvc.bound = True
+                self._notify("pvc", MODIFIED, pvc)
+                if cb:
+                    cb(pvc)
+
+        def do():
+            pvc = PVCObj(name, namespace, created=self.sim.now())
+            self.pvcs[(namespace, name)] = pvc
+            self._notify("pvc", ADDED, pvc)
+            # dynamic provisioning (StorageClass + NFS provisioner pod)
+            self.sim.after(self.p.pvc_create_latency, bound)
+
+        self.sim.after(self.p.api_latency, do)
+
+    # ---- pods ------------------------------------------------------------
+    def create_pod(self, pod: PodObj, cb: Optional[Callable] = None,
+                   error_cb: Optional[Callable] = None):
+        self.api_calls += 1
+
+        def do():
+            key = (pod.namespace, pod.name)
+            if key in self.pods:
+                if error_cb:
+                    error_cb("AlreadyExists", self.pods[key])
+                return
+            if pod.namespace not in self.namespaces:
+                if error_cb:
+                    error_cb("NamespaceNotFound", pod)
+                return
+            pod.created = self.sim.now()
+            pod.phase = PENDING
+            self.pods[key] = pod
+            self.pod_log.append(pod)
+            self._notify("pod", ADDED, pod)
+            self._kick_scheduler()
+            if cb:
+                cb(pod)
+
+        self.sim.after(self.p.api_latency, do)
+
+    def delete_pod(self, namespace: str, name: str,
+                   cb: Optional[Callable] = None):
+        self.api_calls += 1
+
+        def do():
+            pod = self.pods.get((namespace, name))
+            if pod is None:
+                if cb:
+                    cb(None)
+                return
+            self.sim.after(self.p.pod_delete_latency,
+                           lambda: (self._remove_pod(pod), cb(pod) if cb else None))
+
+        self.sim.after(self.p.api_latency, do)
+
+    def _remove_pod(self, pod: PodObj):
+        key = (pod.namespace, pod.name)
+        if self.pods.get(key) is not pod:
+            return
+        self._release(pod)
+        pod.deleted = self.sim.now()
+        del self.pods[key]
+        self._notify("pod", DELETED, pod)
+
+    def _release(self, pod: PodObj):
+        if pod._holding and pod.node in self.nodes:
+            n = self.nodes[pod.node]
+            n.cpu_used -= pod.cpu_m
+            n.mem_used -= pod.mem_mi
+            pod._holding = False
+
+    # ---- the disordered scheduler ---------------------------------------
+    def _kick_scheduler(self):
+        if not self._sched_scheduled:
+            self._sched_scheduled = True
+            self.sim.after(self.p.sched_cycle, self._schedule_cycle)
+
+    def _schedule_cycle(self):
+        self._sched_scheduled = False
+        pending = [p for p in self.pods.values()
+                   if p.phase == PENDING and p.scheduled < 0]   # unbound only
+        if not pending:
+            return
+        self.rng.shuffle(pending)                   # disorderly
+        node_list = list(self.nodes.values())
+        for pod in pending:
+            self.rng.shuffle(node_list)             # scattered
+            for node in node_list:
+                if node.fits(pod.cpu_m, pod.mem_mi):
+                    self._bind(pod, node)
+                    break
+        if any(p.phase == PENDING and p.scheduled < 0
+               for p in self.pods.values()):
+            self._kick_scheduler()
+
+    def _bind(self, pod: PodObj, node: NodeObj):
+        pod.node = node.name
+        pod.scheduled = self.sim.now()
+        node.cpu_used += pod.cpu_m
+        node.mem_used += pod.mem_mi
+        pod._holding = True
+        start_lat = self.p.pod_start_latency
+        if pod.volume:
+            start_lat += self.p.pvc_mount_latency
+        self.sim.after(start_lat, lambda: self._start(pod))
+
+    def _start(self, pod: PodObj):
+        if self.pods.get((pod.namespace, pod.name)) is not pod:
+            return                                   # deleted while starting
+        if not self.nodes[pod.node].ready:
+            return                                   # node died mid-start
+        pod.phase = RUNNING
+        pod.started = self.sim.now()
+        self._notify("pod", MODIFIED, pod)
+        dur = pod.duration_s
+        if pod.payload is not None and self.payload_mode == "real":
+            dur = measure_wall(pod.payload)
+        elif pod.payload is not None:
+            pod.payload()                            # run, but virtual timing
+        dur *= self.nodes[pod.node].slow_factor
+        self.sim.after(dur, lambda: self._finish(pod, SUCCEEDED))
+
+    def _finish(self, pod: PodObj, phase: str):
+        if self.pods.get((pod.namespace, pod.name)) is not pod:
+            return
+        if pod.phase != RUNNING:
+            return
+        pod.phase = phase
+        pod.finished = self.sim.now()
+        self._release(pod)                           # compute freed; object stays
+        self._notify("pod", MODIFIED, pod)
+
+    def fail_pod(self, namespace: str, name: str):
+        pod = self.pods.get((namespace, name))
+        if pod is not None and pod.phase == RUNNING:
+            self._finish(pod, FAILED)
+
+    # ---- node failure (fault-tolerance substrate) -------------------------
+    def fail_node(self, name: str):
+        node = self.nodes[name]
+        node.ready = False
+        self._notify("node", MODIFIED, node)
+        for pod in list(self.pods.values()):
+            if pod.node == name and pod.phase in (PENDING, RUNNING):
+                self._release(pod)
+                pod.phase = FAILED
+                pod.finished = self.sim.now()
+                self._notify("pod", MODIFIED, pod)
+
+    def restore_node(self, name: str):
+        node = self.nodes[name]
+        node.ready = True
+        node.cpu_used = node.mem_used = 0
+        self._notify("node", MODIFIED, node)
+        self._kick_scheduler()
+
+    # ---- reads (each list is an apiserver round-trip — the pressure the
+    # Informer cache avoids; watch-driven callers never come here) ----------
+    def list_pods(self, namespace: Optional[str] = None) -> List[PodObj]:
+        self.api_calls += 1
+        return [p for (ns, _), p in self.pods.items()
+                if namespace is None or ns == namespace]
+
+    def list_nodes(self) -> List[NodeObj]:
+        self.api_calls += 1
+        return list(self.nodes.values())
+
+    def list_namespaces(self) -> List[NamespaceObj]:
+        self.api_calls += 1
+        return list(self.namespaces.values())
+
+    def allocatable(self) -> Tuple[int, int]:
+        cpu = sum(n.cpu_alloc for n in self.nodes.values() if n.ready)
+        mem = sum(n.mem_alloc for n in self.nodes.values() if n.ready)
+        return cpu, mem
+
+    def used(self) -> Tuple[int, int]:
+        cpu = sum(n.cpu_used for n in self.nodes.values())
+        mem = sum(n.mem_used for n in self.nodes.values())
+        return cpu, mem

@@ -1,0 +1,268 @@
+"""KubeAdaptor engine (§4.3–4.6): the docking framework itself.
+
+Modules, mapped 1:1 to the paper's architecture diagram (Fig 3):
+  * workflow input interface   — ``submit`` (fed by the injector via the
+                                 in-process gRPC analogue)
+  * workflow namespace creator — ``_create_namespace`` (+ PVC via
+                                 VolumeManager/StorageClass)
+  * task container creator     — ``_create_task_pods`` (concurrent
+                                 creates for parallel offspring =
+                                 the Goroutine mechanism)
+  * resource gathering/alloc   — ResourceGatherer admission gate
+  * state tracking & monitoring— InformerSet handlers feeding the
+                                 EventRegistry (§4.6 sequence diagram)
+  * workflow container destroy — ``_on_pod_succeeded`` -> delete; the
+                                 deletion event triggers successors
+  * fault tolerance (§4.5)     — Failed pods recreated (<= max_retries),
+                                 AlreadyExists resolved by delete+retry;
+                                 node loss surfaces as pod failures and
+                                 takes the same path
+  * straggler mitigation       — optional speculative twin when a pod
+                                 overruns straggler_factor x expected
+                                 (beyond-paper, for the 1000-node brief)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core import calibration as cal
+from repro.core.cluster import (FAILED, PENDING, RUNNING, SUCCEEDED, Cluster,
+                                PodObj)
+from repro.core.dag import Task, Workflow
+from repro.core.events import EventRegistry
+from repro.core.informer import InformerSet
+from repro.core.metrics import MetricsCollector
+from repro.core.resources import ResourceGatherer
+from repro.core.schedulers import TopologicalScheduler
+from repro.core.sim import Sim
+from repro.core.volumes import VolumeManager
+
+
+@dataclass
+class WorkflowState:
+    wf: Workflow
+    pvc: Optional[str] = None
+    created: Set[str] = field(default_factory=set)      # tasks with live pods
+    completed: Set[str] = field(default_factory=set)    # deps satisfied
+    retries: Dict[str, int] = field(default_factory=dict)
+    speculated: Set[str] = field(default_factory=set)
+    done: bool = False
+
+    @property
+    def ns(self) -> str:
+        return self.wf.namespace()
+
+
+class KubeAdaptorEngine:
+    name = "kubeadaptor"
+
+    def __init__(self, sim: Sim, cluster: Cluster, informers: InformerSet,
+                 events: EventRegistry, volumes: VolumeManager,
+                 metrics: MetricsCollector,
+                 params: cal.ClusterParams = cal.DEFAULT_PARAMS,
+                 scheduler_cls=TopologicalScheduler,
+                 speculative: bool = False,
+                 on_workflow_done: Optional[Callable] = None):
+        self.sim = sim
+        self.cluster = cluster
+        self.inf = informers
+        self.events = events
+        self.volumes = volumes
+        self.metrics = metrics
+        self.p = params
+        self.scheduler_cls = scheduler_cls
+        self.speculative = speculative
+        self.on_workflow_done = on_workflow_done
+        self._ws: Dict[str, WorkflowState] = {}
+        self._started = False
+
+    # ------------------------------------------------------------------ #
+    # wiring (event-trigger mechanism, Fig 4)
+    # ------------------------------------------------------------------ #
+    def start(self):
+        if self._started:
+            return
+        self._started = True
+        self.inf.pods.add_handlers(on_update=self._pod_updated,
+                                   on_delete=self._pod_deleted)
+        self.events.register("pod-succeeded", self._on_pod_succeeded)
+        self.events.register("pod-failed", self._on_pod_failed)
+        self.events.register("pod-removed", self._on_pod_removed)
+
+    def _mine(self, pod: PodObj) -> Optional[WorkflowState]:
+        if pod.labels.get("engine") != self.name:
+            return None
+        return self._ws.get(pod.namespace)
+
+    def _pod_updated(self, pod: PodObj):
+        ws = self._mine(pod)
+        if ws is None:
+            return
+        if pod.phase == RUNNING:
+            self.metrics.note_start(ws.wf, pod.task_id)
+            if self.speculative and not pod.labels.get("twin"):
+                self._arm_straggler_check(ws, pod)
+        elif pod.phase == SUCCEEDED:
+            self.events.emit("pod-succeeded", pod)
+        elif pod.phase == FAILED:
+            self.events.emit("pod-failed", pod)
+
+    def _pod_deleted(self, pod: PodObj):
+        if pod.labels.get("engine") == self.name:
+            self.events.emit("pod-removed", pod)
+
+    # ------------------------------------------------------------------ #
+    # workflow input interface
+    # ------------------------------------------------------------------ #
+    def submit(self, wf: Workflow):
+        self.start()
+        ws = WorkflowState(wf=wf)
+        ws.scheduler = self.scheduler_cls(wf)     # type: ignore[attr-defined]
+        self._ws[ws.ns] = ws
+        self.metrics.wf_record(wf)
+        self.cluster.create_namespace(ws.ns, cb=lambda _ns: self._ns_ready(ws))
+
+    def _ns_ready(self, ws: WorkflowState):
+        self.metrics.note_ns_created(ws.wf)
+        ws.pvc = self.volumes.provision(ws.ns, cb=lambda _p: self._submit_ready(ws))
+
+    # ------------------------------------------------------------------ #
+    # task container creator + resource gate
+    # ------------------------------------------------------------------ #
+    def _ready_tasks(self, ws: WorkflowState) -> List[str]:
+        out = []
+        for tid, t in ws.wf.tasks.items():
+            if tid in ws.completed or tid in ws.created:
+                continue
+            if all(d in ws.completed for d in t.inputs):
+                out.append(tid)
+        return ws.scheduler.order_ready(out)      # type: ignore[attr-defined]
+
+    def _submit_ready(self, ws: WorkflowState):
+        if ws.done:
+            return
+        ready = [ws.wf.tasks[t] for t in self._ready_tasks(ws)]
+        gatherer = ResourceGatherer(self.inf)
+        for task in gatherer.admit(ready):
+            self._create_pod(ws, task)
+
+    def _create_pod(self, ws: WorkflowState, task: Task, twin: bool = False):
+        name = task.id + ("-twin" if twin else "")
+        labels = {"engine": self.name, "task": task.id}
+        if task.virtual:
+            labels["virtual"] = "1"
+        if twin:
+            labels["twin"] = "1"
+        cpu, mem = task.resource_request()
+        payload = None
+        if task.payload is not None:
+            vol = self.volumes.volume(ws.pvc)
+            payload = (lambda t=task, v=vol: t.payload(v, t))
+        pod = PodObj(name=name, namespace=ws.ns, task_id=task.id,
+                     workflow=ws.wf.name, cpu_m=cpu, mem_mi=mem,
+                     duration_s=task.run_time(), payload=payload,
+                     volume=ws.pvc, labels=labels)
+        ws.created.add(task.id)
+        self.cluster.create_pod(
+            pod,
+            error_cb=lambda reason, existing: self._on_create_error(
+                ws, task, reason, existing))
+
+    def _on_create_error(self, ws: WorkflowState, task: Task, reason: str,
+                         existing: PodObj):
+        # §4.5: duplicate pod -> destroy it, then request creation again
+        if reason == "AlreadyExists":
+            self.cluster.delete_pod(
+                ws.ns, existing.name,
+                cb=lambda _p: self._create_pod(ws, task))
+        elif reason == "NamespaceNotFound" and not ws.done:
+            self.cluster.create_namespace(
+                ws.ns, cb=lambda _ns: self._create_pod(ws, task))
+
+    # ------------------------------------------------------------------ #
+    # event callbacks (the §4.6 trigger chain)
+    # ------------------------------------------------------------------ #
+    def _on_pod_succeeded(self, pod: PodObj):
+        ws = self._mine(pod)
+        if ws is None or ws.done:
+            return
+        task_id = pod.task_id
+        if task_id not in ws.completed:
+            self.metrics.note_finish(ws.wf, task_id)
+        # destruction module removes the finished pod (twin too)
+        self.cluster.delete_pod(pod.namespace, pod.name)
+        if task_id in ws.speculated:
+            other = task_id + ("-twin" if pod.name == task_id else "")
+            if other != pod.name:
+                self.cluster.delete_pod(pod.namespace, other)
+
+    def _on_pod_removed(self, pod: PodObj):
+        ws = self._mine(pod)
+        if ws is None or ws.done:
+            return
+        if pod.phase != SUCCEEDED:
+            return                       # failed-pod removals handled elsewhere
+        tid = pod.task_id
+        first_completion = tid not in ws.completed
+        ws.completed.add(tid)
+        if first_completion:
+            if len(ws.completed) == len(ws.wf.tasks):
+                self._workflow_complete(ws)
+            else:
+                # trigger the subsequent task pods right now
+                self._submit_ready(ws)
+
+    def _on_pod_failed(self, pod: PodObj):
+        ws = self._mine(pod)
+        if ws is None or ws.done:
+            return
+        tid = pod.task_id
+        if tid in ws.completed:          # twin already finished the task
+            self.cluster.delete_pod(pod.namespace, pod.name)
+            return
+        n = ws.retries.get(tid, 0) + 1
+        ws.retries[tid] = n
+        self.metrics.wf_record(ws.wf).retries += 1
+        task = ws.wf.tasks[tid]
+        if n > self.p.max_retries:
+            raise RuntimeError(f"{ws.ns}/{tid} exceeded retries")
+        # remove the failed pod, then request generation again (§4.5)
+        def recreate(_p):
+            ws.created.discard(tid)
+            if pod.name.endswith("-twin"):
+                return                   # only the primary is retried
+            self._create_pod(ws, task)
+        self.cluster.delete_pod(pod.namespace, pod.name, cb=recreate)
+
+    # ------------------------------------------------------------------ #
+    # straggler mitigation (speculative twin)
+    # ------------------------------------------------------------------ #
+    def _arm_straggler_check(self, ws: WorkflowState, pod: PodObj):
+        expected = max(pod.duration_s, 0.1)
+        wait = max(self.p.straggler_min_wait, self.p.straggler_factor * expected)
+
+        def check():
+            live = self.cluster.pods.get((pod.namespace, pod.name))
+            if (live is not None and live.phase == RUNNING
+                    and live.task_id not in ws.completed
+                    and live.task_id not in ws.speculated):
+                ws.speculated.add(pod.task_id)
+                self._create_pod(ws, ws.wf.tasks[pod.task_id], twin=True)
+
+        self.sim.after(wait, check)
+
+    # ------------------------------------------------------------------ #
+    # completion
+    # ------------------------------------------------------------------ #
+    def _workflow_complete(self, ws: WorkflowState):
+        ws.done = True
+
+        def ns_gone(_ns):
+            self.metrics.note_ns_deleted(ws.wf)
+            self.volumes.release(ws.ns)
+            self.events.emit("workflow-complete", ws.wf)
+            if self.on_workflow_done:
+                self.on_workflow_done(ws.wf)
+
+        self.cluster.delete_namespace(ws.ns, cb=ns_gone)

@@ -1,0 +1,53 @@
+"""Workflow injection module (§4.4) — the gRPC-fed side-car.
+
+Components map to the paper's module: the Workflow Parser reads
+ConfigMap JSON (configs/workflows.py), the Workflow Sending Module
+pushes one workflow at a time over the in-process "gRPC" channel
+(a small fixed latency), and the Next Workflow Trigger Module responds
+to the engine's completion events by sending the next instance.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.dag import Workflow, make_workflow
+from repro.core.sim import Sim
+
+GRPC_LATENCY = 0.02
+
+
+class WorkflowInjector:
+    def __init__(self, sim: Sim, send_to: Callable[[Workflow], None],
+                 grpc_latency: float = GRPC_LATENCY):
+        self.sim = sim
+        self.send_to = send_to
+        self.grpc_latency = grpc_latency
+        self.queue: List[Workflow] = []
+        self.sent = 0
+        self.on_drained: Optional[Callable[[], None]] = None
+
+    # -- workflow parser -------------------------------------------------
+    def load_configmap(self, name: str, data, repeats: int = 1):
+        base = make_workflow(name, data)
+        for i in range(repeats):
+            self.queue.append(base.with_instance(i))
+
+    def load(self, workflows: List[Workflow]):
+        self.queue.extend(workflows)
+
+    # -- sending module ----------------------------------------------------
+    def start(self):
+        self._send_next()
+
+    def _send_next(self):
+        if not self.queue:
+            if self.on_drained:
+                self.on_drained()
+            return
+        wf = self.queue.pop(0)
+        self.sent += 1
+        self.sim.after(self.grpc_latency, lambda: self.send_to(wf))
+
+    # -- next-workflow trigger ----------------------------------------------
+    def request_next(self, _wf: Optional[Workflow] = None):
+        self._send_next()

@@ -1,0 +1,145 @@
+"""Metrics: pod timelines, workflow lifecycles, resource-usage sampling.
+
+Definitions follow the paper exactly:
+  * task-pod execution time  = pod deletion - pod creation (Fig 7),
+  * workflow lifecycle       = namespace creation -> namespace deletion
+                               (Fig 8: "from creation to death of the
+                               workflow namespace"),
+  * resource usage rate      = requested(running pods) / allocatable,
+                               sampled every 0.5 s (Figs 9-14),
+  * order consistency        = pod start order is a topological
+                               linearization of the DAG (Fig 6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import calibration as cal
+from repro.core.cluster import Cluster, SUCCEEDED
+from repro.core.dag import Workflow
+from repro.core.sim import Sim
+
+
+@dataclass
+class WorkflowRecord:
+    name: str
+    instance: int
+    ns_created: float = -1.0
+    ns_deleted: float = -1.0
+    starts: List[Tuple[float, str]] = field(default_factory=list)   # (t, task)
+    finishes: Dict[str, float] = field(default_factory=dict)
+    retries: int = 0
+
+    @property
+    def lifecycle(self) -> float:
+        return self.ns_deleted - self.ns_created
+
+
+class MetricsCollector:
+    def __init__(self, sim: Sim, cluster: Cluster,
+                 params: cal.ClusterParams = cal.DEFAULT_PARAMS):
+        self.sim = sim
+        self.cluster = cluster
+        self.p = params
+        self.workflows: Dict[Tuple[str, int], WorkflowRecord] = {}
+        self.samples: List[Tuple[float, int, int]] = []   # (t, cpu_m, mem_mi)
+        self._sampling = False
+
+    # ---- lifecycle bookkeeping (engines call these) ---------------------
+    def wf_record(self, wf: Workflow) -> WorkflowRecord:
+        key = (wf.name, wf.instance)
+        if key not in self.workflows:
+            self.workflows[key] = WorkflowRecord(wf.name, wf.instance)
+        return self.workflows[key]
+
+    def note_ns_created(self, wf: Workflow):
+        self.wf_record(wf).ns_created = self.sim.now()
+
+    def note_ns_deleted(self, wf: Workflow):
+        self.wf_record(wf).ns_deleted = self.sim.now()
+
+    def note_start(self, wf: Workflow, task_id: str):
+        self.wf_record(wf).starts.append((self.sim.now(), task_id))
+
+    def note_finish(self, wf: Workflow, task_id: str):
+        self.wf_record(wf).finishes[task_id] = self.sim.now()
+
+    # ---- resource sampling ------------------------------------------------
+    def start_sampling(self):
+        if self._sampling:
+            return
+        self._sampling = True
+
+        def sample():
+            cpu, mem = self.cluster.used()
+            self.samples.append((self.sim.now(), cpu, mem))
+            if self._sampling:
+                self.sim.after(self.p.sample_period, sample, daemon=True)
+
+        sample()
+
+    def stop_sampling(self):
+        self._sampling = False
+
+    # ---- derived metrics (the figures) -------------------------------------
+    def pod_exec_times(self, workflow: Optional[str] = None,
+                       include_virtual: bool = False) -> List[float]:
+        out = []
+        for pod in self.cluster.pod_log:
+            if workflow is not None and pod.workflow != workflow:
+                continue
+            if not include_virtual and pod.labels.get("virtual") == "1":
+                continue
+            if pod.deleted > 0 and pod.phase == SUCCEEDED:
+                out.append(pod.deleted - pod.created)
+        return out
+
+    def avg_pod_exec_time(self, workflow: Optional[str] = None) -> float:
+        xs = self.pod_exec_times(workflow)
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def lifecycles(self, name: str) -> List[float]:
+        return [r.lifecycle for (n, _), r in self.workflows.items()
+                if n == name and r.ns_deleted > 0]
+
+    def avg_lifecycle(self, name: str) -> float:
+        xs = self.lifecycles(name)
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def total_time(self, name: str) -> float:
+        recs = [r for (n, _), r in self.workflows.items() if n == name]
+        if not recs:
+            return float("nan")
+        return max(r.ns_deleted for r in recs) - min(r.ns_created for r in recs)
+
+    def order_consistent(self, wf: Workflow) -> bool:
+        """Start order must be a topological linearization of the DAG
+        AND every dependency must have FINISHED before the dependent starts."""
+        rec = self.wf_record(wf)
+        started_at = {t: ts for ts, t in rec.starts}
+        for ts, tid in rec.starts:
+            for dep in wf.tasks[tid].inputs:
+                if dep not in rec.finishes or rec.finishes[dep] > ts + 1e-9:
+                    return False
+                if dep not in started_at or started_at[dep] > ts + 1e-9:
+                    return False
+        return len(rec.starts) >= len(wf.tasks)
+
+    def usage_rate_over(self, t0: float, t1: float) -> Tuple[float, float]:
+        """Average (cpu_rate, mem_rate) over [t0, t1] vs allocatable."""
+        cpu_a, mem_a = self.cluster.allocatable()
+        window = [(t, c, m) for t, c, m in self.samples if t0 <= t <= t1]
+        if not window or cpu_a == 0:
+            return 0.0, 0.0
+        cpu = sum(c for _, c, _ in window) / len(window) / cpu_a
+        mem = sum(m for _, _, m in window) / len(window) / mem_a
+        return cpu, mem
+
+    def first_lifecycle_usage(self, name: str) -> Tuple[float, float]:
+        recs = sorted((r for (n, _), r in self.workflows.items() if n == name),
+                      key=lambda r: r.ns_created)
+        if not recs:
+            return 0.0, 0.0
+        r = recs[0]
+        return self.usage_rate_over(r.ns_created, r.ns_deleted)

@@ -1,0 +1,62 @@
+"""Resource gathering & allocation module (§4.3).
+
+Reads NodeLister/PodLister from the informer cache (never the
+apiserver), computes cluster headroom as
+
+    available = sum(Allocatable of ready nodes)        (master excluded —
+              - sum(Requests of non-terminal pods)      it isn't in the
+                                                        node list at all)
+
+and gates task-pod creation on fit. This is what lets KubeAdaptor admit
+exactly as many concurrent task pods as the cluster can hold instead of
+flooding the scheduler queue.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.cluster import FAILED, PENDING, RUNNING, SUCCEEDED
+from repro.core.dag import Task
+from repro.core.informer import InformerSet
+
+
+class ResourceGatherer:
+    def __init__(self, informers: InformerSet):
+        self.inf = informers
+
+    def allocatable(self) -> Tuple[int, int]:
+        cpu = mem = 0
+        for node in self.inf.nodes.lister():
+            if node.ready:
+                cpu += node.cpu_alloc
+                mem += node.mem_alloc
+        return cpu, mem
+
+    def requested(self) -> Tuple[int, int]:
+        cpu = mem = 0
+        for pod in self.inf.pods.lister():
+            if pod.phase in (PENDING, RUNNING):
+                cpu += pod.cpu_m
+                mem += pod.mem_mi
+        return cpu, mem
+
+    def available(self) -> Tuple[int, int]:
+        (ca, ma), (cr, mr) = self.allocatable(), self.requested()
+        return ca - cr, ma - mr
+
+    def fits(self, task: Task) -> bool:
+        cpu, mem = task.resource_request()
+        ac, am = self.available()
+        return cpu <= ac and mem <= am
+
+    def admit(self, tasks: List[Task]) -> List[Task]:
+        """Greedy admission of a ready set within current headroom."""
+        ac, am = self.available()
+        out = []
+        for t in tasks:
+            cpu, mem = t.resource_request()
+            if cpu <= ac and mem <= am:
+                out.append(t)
+                ac -= cpu
+                am -= mem
+        return out

@@ -1,0 +1,81 @@
+"""One-call experiment runner: engine x workflow x repeats -> metrics.
+
+This is the harness every benchmark and test uses; it wires a fresh
+Sim/Cluster/Informer/Event/Volume/Metrics stack, runs ``repeats``
+back-to-back instances (the paper runs 100), and returns the collector.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Type
+
+from repro.core import calibration as cal
+from repro.core.baselines import ArgoLikeEngine, BatchJobEngine, DirectSubmitEngine
+from repro.core.cluster import Cluster
+from repro.core.dag import Workflow
+from repro.core.engine import KubeAdaptorEngine
+from repro.core.events import EventRegistry
+from repro.core.informer import InformerSet
+from repro.core.injector import WorkflowInjector
+from repro.core.metrics import MetricsCollector
+from repro.core.sim import Sim
+from repro.core.volumes import VolumeManager
+
+ENGINES = {
+    "kubeadaptor": KubeAdaptorEngine,
+    "batchjob": BatchJobEngine,
+    "argo": ArgoLikeEngine,
+    "direct": DirectSubmitEngine,
+}
+
+
+@dataclass
+class RunResult:
+    metrics: MetricsCollector
+    cluster: Cluster
+    sim: Sim
+    engine: object
+    api_calls: int
+
+
+def run_experiment(engine_name: str, workflow: Workflow, repeats: int = 1,
+                   params: cal.ClusterParams = cal.DEFAULT_PARAMS,
+                   cluster_cfg: cal.PaperCluster = cal.DEFAULT_CLUSTER,
+                   payload_mode: str = "virtual", seed: int = 0,
+                   speculative: bool = False,
+                   sample_resources: bool = True,
+                   horizon_s: float = 500_000.0) -> RunResult:
+    sim = Sim()
+    cluster = Cluster(sim, params, cluster_cfg, payload_mode=payload_mode,
+                      seed=seed)
+    volumes = VolumeManager(sim, cluster, params)
+    metrics = MetricsCollector(sim, cluster, params)
+
+    if engine_name == "kubeadaptor":
+        informers = InformerSet(sim, cluster, params)
+        events = EventRegistry(sim)
+        engine = KubeAdaptorEngine(sim, cluster, informers, events, volumes,
+                                   metrics, params, speculative=speculative)
+        injector = WorkflowInjector(sim, engine.submit)
+        engine.on_workflow_done = injector.request_next
+        injector.load([workflow.with_instance(i) for i in range(repeats)])
+        if sample_resources:
+            metrics.start_sampling()
+        injector.start()
+        injector.on_drained = metrics.stop_sampling
+    else:
+        cls = ENGINES[engine_name]
+        engine = cls(sim, cluster, volumes, metrics, params)
+        injector = WorkflowInjector(sim, engine.submit)
+        engine.on_workflow_done = injector.request_next
+        injector.load([workflow.with_instance(i) for i in range(repeats)])
+        if sample_resources:
+            metrics.start_sampling()
+        injector.start()
+        injector.on_drained = metrics.stop_sampling
+
+    sim.run(until=horizon_s)
+    if not sim.idle() and injector.queue:
+        raise RuntimeError(f"{engine_name} did not finish within horizon")
+    return RunResult(metrics=metrics, cluster=cluster, sim=sim, engine=engine,
+                     api_calls=cluster.api_calls)

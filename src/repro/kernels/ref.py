@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernel tests assert against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with
+``np.testing.assert_allclose``). They are intentionally the simplest
+possible formulations — O(S^2) attention, step-by-step SSD recurrence —
+NOT the chunked/blocked production paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Dense reference attention. q,k,v: (B, S, H, hd) (full-H form)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        S, T = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32)).astype(v.dtype)
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence (the literal state-space definition).
+
+    x: (b, s, h, p)  dt: (b, s, h)  A: (h,)  B, C: (b, s, n)
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+
+      state_t = exp(dt_t * A) * state_{t-1} + dt_t * B_t (x) x_t
+      y_t     = C_t . state_t
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt.astype(f32) * A.astype(f32))          # (b, h)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(f32),
+                         Bt.astype(f32), xt.astype(f32))
+        state = dA[:, :, None, None] * state + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Ct.astype(f32), state)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), f32)
+    final, ys = jax.lax.scan(
+        step, init,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), B.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), final

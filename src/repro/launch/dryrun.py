@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the jitted step (train_step / prefill / serve_step) with the
+     real sharding rules,
+  3. ``.lower(**input_specs)`` against ShapeDtypeStructs (no allocation),
+  4. ``.compile()`` — any sharding mismatch / unsupported collective
+     fails HERE, which is the point of the exercise,
+  5. prints ``compiled.memory_analysis()`` + ``cost_analysis()`` and
+     parses the optimized HLO for loop-aware FLOPs / collective bytes,
+  6. writes a JSON artifact to ``artifacts/dryrun/`` for the roofline
+     report (benchmarks/roofline.py reads these).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import REGISTRY, SHAPES, get_config, shape_applicable
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import RunConfig, build
+from repro.optim.adamw import OptConfig
+from repro.parallel.sharding import ShardingPolicy
+from repro.runtime.serve import build_decode_step, build_prefill_step
+from repro.runtime.specs import input_specs
+from repro.runtime.train import TrainRunConfig, build_train_step
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+
+
+def pick_grad_accum(cfg, shape) -> int:
+    """Microbatch count keeping activations-per-chip sane (see DESIGN)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return 8            # SSD intra-chunk tensors are fat per param
+    n = cfg.param_count()
+    if n > 30e9:
+        return 16
+    if n > 8e9:
+        return 8
+    if n > 2e9:
+        return 4
+    return 2
+
+
+def make_runconfig(cfg, shape) -> RunConfig:
+    return RunConfig(
+        param_dtype="float32",
+        compute_dtype="bfloat16",
+        remat=(shape.kind == "train"),
+        remat_policy="full",   # save only layer-boundary carries
+        attn_chunk=1024,
+        attn_dense_max=4096,
+        # c=32 is the measured intra/inter traffic optimum for BOTH ssm
+        # archs (§Perf cell C + zamba2 confirmation)
+        ssd_chunk=32 if shape.kind == "train" else 0,   # prefill prefers 128
+    )
+
+
+def build_cell(cfg, shape, mesh, rc=None, policy=None, trc=None):
+    """Returns (jitted_fn, kwargs_of_ShapeDtypeStructs)."""
+    rc = rc or make_runconfig(cfg, shape)
+    policy = policy or ShardingPolicy()
+    if shape.kind == "train":
+        trc = trc or TrainRunConfig(opt=OptConfig(),
+                                    grad_accum=pick_grad_accum(cfg, shape))
+        jitted, state_sds, batch_sds, *_ = build_train_step(
+            cfg, mesh, B=shape.global_batch, S=shape.seq_len, rc=rc,
+            policy=policy, trc=trc)
+        return jitted, {"state": state_sds, "batch": batch_sds}
+    if shape.kind == "prefill":
+        jitted, params_sds, batch_sds, *_ = build_prefill_step(
+            cfg, mesh, B=shape.global_batch, S=shape.seq_len, rc=rc,
+            policy=policy)
+        return jitted, {"params": params_sds, "batch": batch_sds}
+    if shape.kind == "decode":
+        jitted, params_sds, cache_sds, batch_sds, *_ = build_decode_step(
+            cfg, shape, mesh, rc=rc, policy=policy)
+        return jitted, {"params": params_sds, "cache": cache_sds,
+                        "batch": batch_sds}
+    raise ValueError(shape.kind)
+
+
+def roofline_terms(stats: hlo_analysis.HloStats):
+    compute_s = stats.flops / PEAK_FLOPS
+    memory_s = stats.mem_bytes / HBM_BW
+    collective_s = stats.total_collective_bytes / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return terms, dominant
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 6ND / 2ND 'useful' FLOPs for the cell (global)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch          # decode: one token
+
+
+def _tree_bytes(sds_tree) -> int:
+    import numpy as np
+    total = 0
+    for leaf in jax.tree.leaves(sds_tree):
+        total += int(np.prod(leaf.shape)) * jnp_dtype_size(leaf.dtype)
+    return total
+
+
+def jnp_dtype_size(dt) -> int:
+    import numpy as np
+    try:
+        return np.dtype(dt).itemsize
+    except TypeError:
+        return 2  # bf16 et al.
+
+
+def ideal_step_seconds(cfg, shape, n_chips: int, kwargs) -> float:
+    """The roofline floor for this cell on this mesh.
+
+    train/prefill: compute-bound floor (MODEL_FLOPS at peak bf16).
+    decode: ALSO bandwidth-bound floor — every step must stream the
+    (bf16) weights + the KV/SSM cache once; the larger floor governs.
+    """
+    comp = model_flops(cfg, shape) / n_chips / PEAK_FLOPS
+    if shape.kind != "decode":
+        return comp
+    bytes_ideal = cfg.active_param_count() * 2
+    if "cache" in kwargs:
+        bytes_ideal += _tree_bytes(kwargs["cache"])
+    return max(comp, bytes_ideal / n_chips / HBM_BW)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             mesh=None, verbose: bool = True, policy=None, rc=None,
+             trc=None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "tag": tag, "status": "ok"}
+
+    if not shape_applicable(cfg, shape):
+        result["status"] = "skipped"
+        result["reason"] = ("long_500k requires a sub-quadratic family; "
+                            f"{arch} is pure full-attention (see DESIGN.md)")
+        print(f"[dryrun] SKIP {cell_id}: {result['reason']}")
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{cell_id}.json").write_text(json.dumps(result, indent=1))
+        return result
+
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        jitted, kwargs = build_cell(cfg, shape, mesh, rc=rc, policy=policy, trc=trc)
+        # positional: dict insertion order matches the step signature
+        lowered = jitted.lower(*kwargs.values())
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # a failing cell is a bug we must surface
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {cell_id}: {result['error']}")
+        return result
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    stats = hlo_analysis.analyze(text)
+    terms, dominant = roofline_terms(stats)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = stats.flops * n_chips
+
+    result.update({
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes,
+        },
+        "xla_cost_analysis": {"flops": cost.get("flops", 0.0),
+                              "bytes_accessed": cost.get("bytes accessed", 0.0)},
+        "hlo_per_device": {
+            "flops": stats.flops,
+            "mem_bytes": stats.mem_bytes,
+            "collective_bytes": dict(stats.collective_bytes),
+            "collective_counts": dict(stats.collective_counts),
+            "total_collective_bytes": stats.total_collective_bytes,
+            "n_while": stats.n_while,
+            "trip_counts": stats.trip_counts[:32],
+        },
+        "roofline": {**terms, "dominant": dominant,
+                     "step_time_bound_s": max(terms.values())},
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": mf / hlo_flops_global if hlo_flops_global else 0.0,
+        "ideal_step_s": ideal_step_seconds(cfg, shape, n_chips, kwargs),
+        "roofline_fraction": (
+            ideal_step_seconds(cfg, shape, n_chips, kwargs) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+    })
+
+    if verbose:
+        ma = result["memory_analysis"]
+        print(f"[dryrun] OK   {cell_id}  compile={t_compile:.1f}s")
+        print(f"  memory_analysis: args={ma['argument_bytes']/1e9:.2f}GB "
+              f"temp={ma['temp_bytes']/1e9:.2f}GB "
+              f"peak/device={ma['peak_bytes_per_device']/1e9:.2f}GB")
+        print(f"  cost_analysis: flops/dev={cost.get('flops', 0):.3e} "
+              f"bytes/dev={cost.get('bytes accessed', 0):.3e}")
+        print(f"  hlo(loop-aware)/dev: flops={stats.flops:.3e} "
+              f"mem={stats.mem_bytes/1e9:.2f}GB "
+              f"coll={stats.total_collective_bytes/1e9:.3f}GB "
+              f"{dict(stats.collective_counts)}")
+        print(f"  roofline: compute={terms['compute_s']*1e3:.2f}ms "
+              f"memory={terms['memory_s']*1e3:.2f}ms "
+              f"collective={terms['collective_s']*1e3:.2f}ms "
+              f"dominant={dominant} useful_ratio={result['useful_flops_ratio']:.3f} "
+              f"roofline_frac={result['roofline_fraction']:.3f}")
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-cached", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(REGISTRY) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    summary = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                cached = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_cached and cached.exists():
+                    prev = json.loads(cached.read_text())
+                    if prev.get("status") == "ok" or prev.get("status") == "skipped":
+                        print(f"[dryrun] CACHED {cached.stem} ({prev['status']})")
+                        summary.append(prev)
+                        continue
+                summary.append(run_cell(arch, shape, multi, out_dir, mesh=mesh))
+
+    ok = sum(1 for r in summary if r["status"] == "ok")
+    sk = sum(1 for r in summary if r["status"] == "skipped")
+    bad = [r for r in summary if r["status"] == "error"]
+    print(f"\n[dryrun] total={len(summary)} ok={ok} skipped={sk} failed={len(bad)}")
+    for r in bad:
+        print(f"  FAILED {r['arch']} x {r['shape']} x {r['mesh']}: {r['error']}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

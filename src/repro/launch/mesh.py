@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before any jax
+import and only then calls ``make_production_mesh``.
+
+Production target: TPU v5e pods, 256 chips per pod.
+  single-pod: (data=16, model=16)
+  multi-pod : (pod=2, data=16, model=16) = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests / reduced configs (e.g. (2,4) on 8 devs)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))

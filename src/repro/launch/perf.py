@@ -1,0 +1,113 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimbing driver: re-lower one cell under named variants.
+
+Each variant overrides RunConfig / ShardingPolicy / TrainRunConfig knobs
+and writes a tagged artifact next to the baseline, so
+EXPERIMENTS.md §Perf can diff terms per hypothesis.
+
+  PYTHONPATH=src python -m repro.launch.perf --cell deepseek-67b:train_4k \
+      --variant accum8
+"""
+import argparse
+import dataclasses
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import make_runconfig, pick_grad_accum, run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models import RunConfig
+from repro.optim.adamw import OptConfig
+from repro.parallel.sharding import ShardingPolicy
+from repro.runtime.train import TrainRunConfig
+
+
+def variants_for(cfg, shape):
+    """Named knob bundles. Each returns (rc, policy, trc) overrides."""
+    base_rc = make_runconfig(cfg, shape)
+    base_trc = TrainRunConfig(opt=OptConfig(),
+                              grad_accum=pick_grad_accum(cfg, shape))
+    pol = ShardingPolicy()
+
+    def trc_accum(a):
+        return TrainRunConfig(opt=OptConfig(), grad_accum=a)
+
+    out = {
+        "baseline": (base_rc, pol, base_trc),
+        # microbatching: fewer FSDP weight regathers vs more activations
+        "accum4": (base_rc, pol, trc_accum(4)),
+        "accum8": (base_rc, pol, trc_accum(8)),
+        "accum2": (base_rc, pol, trc_accum(2)),
+        # params kept bf16 (no f32 master copies in the jit graph)
+        "bf16params": (base_rc.replace(param_dtype="bfloat16"), pol, base_trc),
+        # no FSDP: pure TP + replicated storage (small models only)
+        "nofsdp": (base_rc, ShardingPolicy(fsdp=False), base_trc),
+        # remat policy: save dot outputs instead of recomputing everything
+        "rematdots": (base_rc.replace(remat_policy="dots"), pol, base_trc),
+        "noremat": (base_rc.replace(remat=False), pol, base_trc),
+        # attention chunk sizing
+        "chunk512": (base_rc.replace(attn_chunk=512), pol, base_trc),
+        "chunk2048": (base_rc.replace(attn_chunk=2048), pol, base_trc),
+        "densattn": (base_rc.replace(attn_dense_max=100_000), pol, base_trc),
+        # MoE dispatch group sizing
+        "moegroup4096": (base_rc.replace(moe_group=4096), pol, base_trc),
+        "moegroup1024": (base_rc.replace(moe_group=1024), pol, base_trc),
+        "moegroup8192": (base_rc.replace(moe_group=8192), pol, base_trc),
+        "moe8192_accum8": (base_rc.replace(moe_group=8192), pol, trc_accum(8)),
+        "moe8192_accum4": (base_rc.replace(moe_group=8192), pol, trc_accum(4)),
+        "moe16384_accum4": (base_rc.replace(moe_group=16384), pol, trc_accum(4)),
+        "moe8192_a8_bf16": (base_rc.replace(moe_group=8192,
+                                            param_dtype="bfloat16"), pol,
+                            trc_accum(8)),
+        "moe8192_a8_bf16_ax": (base_rc.replace(moe_group=8192,
+                                               param_dtype="bfloat16",
+                                               attn_exit_constrain=True), pol,
+                               trc_accum(8)),
+        "attnexit": (base_rc.replace(attn_exit_constrain=True), pol, base_trc),
+        # Megatron-SP residual carries (layer-stash / collective trade)
+        "spcarry": (base_rc.replace(seq_shard_carry=True), pol, base_trc),
+        "spcarry_accum8": (base_rc.replace(seq_shard_carry=True), pol,
+                           trc_accum(8)),
+        "spcarry_accum4": (base_rc.replace(seq_shard_carry=True), pol,
+                           trc_accum(4)),
+        "spcarry_dots": (base_rc.replace(seq_shard_carry=True,
+                                         remat_policy="dots"), pol, base_trc),
+        "spcarry_noremat": (base_rc.replace(seq_shard_carry=True,
+                                            remat=False), pol, base_trc),
+        # combined best-known (deepseek cell): SP carries + accum4 +
+        # chunked attention + bf16 params
+        "best_dense": (base_rc.replace(seq_shard_carry=True,
+                                       attn_dense_max=2048,
+                                       param_dtype="bfloat16"), pol,
+                       trc_accum(4)),
+        "sp_a4_bf16": (base_rc.replace(seq_shard_carry=True,
+                                       param_dtype="bfloat16"), pol,
+                       trc_accum(4)),
+        # SSD chunk sizing (ssm/hybrid)
+        "ssdchunk128": (base_rc.replace(ssd_chunk=128), pol, base_trc),
+        "ssdchunk32": (base_rc.replace(ssd_chunk=32), pol, base_trc),
+        "ssdchunk16": (base_rc.replace(ssd_chunk=16), pol, base_trc),
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    arch, shape_name = args.cell.split(":")
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rc, pol, trc = variants_for(cfg, shape)[args.variant]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    r = run_cell(arch, shape_name, args.multi_pod, Path(args.out), mesh=mesh,
+                 rc=rc, policy=pol, trc=trc, tag=args.variant)
+    return 0 if r["status"] == "ok" else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

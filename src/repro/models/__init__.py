@@ -1,0 +1,4 @@
+from repro.models.layers import RunConfig
+from repro.models.model_zoo import Model, build
+
+__all__ = ["RunConfig", "Model", "build"]

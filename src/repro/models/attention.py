@@ -1,0 +1,208 @@
+"""Attention: GQA, dense + chunked(online-softmax) + decode-with-cache paths.
+
+Shapes convention:
+  q: (B, S, H, hd)    k/v: (B, T, K, hd)    H = K * G   (GQA groups)
+
+Sharding design (see DESIGN.md §5): prefill/train attention computes in
+full-H form — KV heads are broadcast to H *after* projection (GQA saves
+KV memory/bandwidth, not score FLOPs) and scores are sharded over the
+head axis ('tp'). This keeps every contraction (head_dim, seq) unsharded
+so the only model-parallel collective per block is the Megatron
+row-parallel all-reduce at wo/w2. Decode keeps the (K, G) folded form:
+the KV cache stays in K heads (the big tensor) and the tiny score psum
+is cheaper than materializing a repeated cache.
+
+The chunked path is the memory-subquadratic attention used for 32k
+prefill: O(S * chunk) live scores instead of O(S^2). The Pallas flash
+kernel (kernels/flash_attention.py) implements the same algorithm for
+TPU; ``kernels/ops.py`` dispatches between them.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import RunConfig, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype),
+        "wk": dense_init(ks[1], (d, K * hd), dtype),
+        "wv": dense_init(ks[2], (d, K * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def repeat_kv(k, n_heads: int):
+    """(B,T,K,hd) -> (B,T,H,hd) by broadcasting each KV head over its group."""
+    B, T, K, hd = k.shape
+    G = n_heads // K
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, K, G, hd))
+    return k.reshape(B, T, K * G, hd)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Dense attention in full-H form. q:(B,S,H,hd) k/v:(B,T,H,hd)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        S, T = scores.shape[-2], scores.shape[-1]
+        qpos = jnp.arange(S) + q_offset
+        mask = qpos[:, None] >= jnp.arange(T)[None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", p, v)
+
+
+def chunked_attention(q, k, v, *, chunk: int, causal: bool = True):
+    """Online-softmax attention, scanning KV in blocks of ``chunk``.
+
+    Full-H form. Memory: O(S * chunk) scores live at once (vs O(S^2)
+    dense). FLOPs are the full S^2 (future blocks are masked, not
+    skipped) — block skipping is a recorded §Perf hillclimb item.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    n_blocks = T // chunk
+    assert n_blocks * chunk == T, (T, chunk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    kb = k.reshape(B, n_blocks, chunk, H, hd)
+    vb = v.reshape(B, n_blocks, chunk, H, hd)
+    qpos = jnp.arange(S)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        s = jnp.einsum("bshd,bchd->bhsc", q, kj).astype(jnp.float32) * scale
+        if causal:
+            kpos = j * chunk + jnp.arange(chunk)
+            s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhsc,bchd->bshd", p.astype(vj.dtype), vj)
+        acc = acc * corr.transpose(0, 2, 1)[..., None].astype(acc.dtype) + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, S, H, hd), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(n_blocks)))
+    l = jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return (acc.astype(jnp.float32) / l).astype(v.dtype)
+
+
+def _gqa_fold(q, n_kv):
+    """(B,S,H,hd) -> (B,S,K,G,hd)."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+def decode_attention(q, k_cache, v_cache, index):
+    """Single-token decode, GQA-folded. q:(B,1,K,G,hd) caches:(B,T,K,hd)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    # mixed-precision dot (bf16 x bf16 -> f32): avoids materializing an
+    # f32 copy of the whole KV cache (7.5 GB/dev on gemma decode_32k)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(k_cache.shape[1]) <= index   # positions written so far
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", p, v_cache)
+
+
+def apply_attention(
+    params,
+    x,
+    cfg,
+    rc: RunConfig,
+    positions,
+    *,
+    kv_x=None,                 # cross-attention source (B, N, D); None = self
+    causal: bool = True,
+    cache: Optional[Tuple] = None,   # (k_cache, v_cache) for decode
+    cache_index=None,
+    return_kv: bool = False,
+    is_cross: bool = False,
+):
+    """Returns (out, new_kv) where new_kv is (k,v) for caching or None."""
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    cross = is_cross or (kv_x is not None)
+    src = kv_x if cross else x
+
+    q = jnp.einsum("bsd,df->bsf", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = _split_heads(q, H, hd)
+
+    if cross and cache is not None:
+        # cross-attn KV was computed at prefill and lives in the cache
+        k, v = cache
+    else:
+        k = jnp.einsum("bsd,df->bsf", src, params["wk"])
+        v = jnp.einsum("bsd,df->bsf", src, params["wv"])
+        if "bk" in params:
+            k, v = k + params["bk"], v + params["bv"]
+        k = _split_heads(k, K, hd)
+        v = _split_heads(v, K, hd)
+        if not cross:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_kv = None
+    if cache is not None and not cross:
+        # ---- decode: GQA-folded against the K-head cache ----
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+        new_kv = (k_cache, v_cache)
+        out = decode_attention(_gqa_fold(q, K), k_cache, v_cache, cache_index)
+        out = out.reshape(out.shape[:2] + (H * hd,))
+    else:
+        if cache is not None and cross:
+            new_kv = (k, v)
+        elif return_kv:
+            new_kv = (k, v)
+        # ---- full-H sharded compute ----
+        # 'heads': classic Megatron head-TP (needs H % tp == 0).
+        # 'seq':   query-sequence TP — each rank owns a q-row block against
+        #          the full KV (always divisible; picked by the runtime when
+        #          H doesn't divide the TP axis, e.g. 14 heads on tp=16).
+        if rc.attn_shard == "seq":
+            q_axes, kv_axes = ("dp", "tp", None, None), ("dp", None, None, None)
+        else:
+            q_axes = kv_axes = ("dp", None, "tp", None)
+        q = rc.constrain(q, q_axes)
+        kf = rc.constrain(repeat_kv(k, H), kv_axes)
+        vf = rc.constrain(repeat_kv(v, H), kv_axes)
+        S = x.shape[1]
+        if causal and S > rc.attn_dense_max:
+            out = chunked_attention(q, kf, vf, chunk=rc.attn_chunk or 1024,
+                                    causal=True)
+        else:
+            out = full_attention(q, kf, vf, causal=causal)
+        out = rc.constrain(out, q_axes)
+        out = out.reshape(out.shape[:2] + (H * hd,))
+
+    return jnp.einsum("bsf,fd->bsd", out, params["wo"]), new_kv

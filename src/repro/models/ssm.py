@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 §6:
+  * intra-chunk (quadratic-in-chunk "attention-like" term)
+  * chunk boundary states + inter-chunk linear recurrence (lax.scan)
+  * O(1)-state single-token decode
+
+Projections are kept as separate tensors (x, z, B, C, dt) instead of one
+fused in_proj so each shards cleanly on the TP axis (see
+parallel/sharding.py). A depthwise causal conv (width 4) precedes x/B/C
+exactly as in the reference implementation; with n_groups = 1, B and C
+are shared across SSD heads.
+
+The Pallas kernel (kernels/ssd_scan.py) mirrors ``ssd_chunked`` for TPU;
+``kernels/ref.py`` re-exports it as the oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import RunConfig, dense_init, rms_norm
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state for one Mamba2 layer (stackable)."""
+
+    ssd: jax.Array      # (B, H, P, N)
+    conv_x: jax.Array   # (B, W-1, d_inner)
+    conv_B: jax.Array   # (B, W-1, N)
+    conv_C: jax.Array   # (B, W-1, N)
+
+
+def init_mamba(key, cfg, dtype):
+    d, di, N, H, W = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[6], (H,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_x": dense_init(ks[0], (d, di), dtype),
+        "in_z": dense_init(ks[1], (d, di), dtype),
+        "in_B": dense_init(ks[2], (d, N), dtype),
+        "in_C": dense_init(ks[3], (d, N), dtype),
+        "in_dt": dense_init(ks[4], (d, H), dtype),
+        "conv_x": (jax.random.normal(ks[5], (W, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_B": jnp.zeros((W, N), dtype) + 1.0 / W,
+        "conv_C": jnp.zeros((W, N), dtype) + 1.0 / W,
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "out": dense_init(ks[7], (di, d), dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def causal_conv(x, w, tail=None):
+    """Depthwise causal conv. x:(B,S,C) w:(W,C) tail:(B,W-1,C) or None.
+
+    Returns (y, new_tail). Implemented as W shifted adds (W is 4) — cheap,
+    fusion-friendly, and SPMD-safe.
+    """
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)          # (B, S+W-1, C)
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S, :] * w[i] for i in range(W))
+    new_tail = xp[:, -(W - 1):, :]
+    return y, new_tail
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs per head; dt: (B,S,H) post-softplus step sizes;
+    A: (H,) negative decay rates; Bm/Cm: (B,S,N) input/output maps.
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    f32 = jnp.float32
+
+    dA = (dt.astype(f32) * A.astype(f32))                       # (B,S,H) log-decay
+    dAc = dA.reshape(Bsz, nc, chunk, H)
+    cum = jnp.cumsum(dAc, axis=2)                               # (B,nc,c,H)
+    xc = xh.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+
+    # ---- intra-chunk (diagonal blocks) -------------------------------
+    # Processed in head blocks: the decay tensor (B,nc,c,c,hb) would be
+    # tens of GB at hb=H (e.g. zamba2 train_4k hit 45GB/device) — the
+    # Pallas kernel (kernels/ssd_scan.py) keeps it in VMEM instead.
+    CB = jnp.einsum("bzin,bzjn->bzij", Cc, Bc)                  # (B,nc,c,c)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    CBm = jnp.where(tri[None, None], CB, 0.0)
+
+    hb = min(4, H)   # (B,nc,c,c,hb) f32 is the peak intra-chunk tensor
+    while H % hb:
+        hb -= 1
+
+    @jax.checkpoint  # recompute decay in bwd: keep ONE block live at a time
+    def _diag_block(args):
+        cum_b, dt_b, x_b = args                 # (B,nc,c,hb), ..., (B,nc,c,hb,P)
+        decay = jnp.exp(cum_b[:, :, :, None, :] - cum_b[:, :, None, :, :])
+        decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+        return jnp.einsum("bzij,bzijh,bzjh,bzjhp->bzihp",
+                          CBm, decay, dt_b, x_b)
+
+    cum_hb = cum.reshape(Bsz, nc, chunk, H // hb, hb).transpose(3, 0, 1, 2, 4)
+    dt_hb = dtc.reshape(Bsz, nc, chunk, H // hb, hb).transpose(3, 0, 1, 2, 4)
+    x_hb = xc.astype(f32).reshape(Bsz, nc, chunk, H // hb, hb, P).transpose(3, 0, 1, 2, 4, 5)
+    y_hb = jax.lax.map(_diag_block, (cum_hb, dt_hb, x_hb))      # (H/hb,B,nc,c,hb,P)
+    y_diag = y_hb.transpose(1, 2, 3, 0, 4, 5).reshape(Bsz, nc, chunk, H, P)
+
+    # ---- chunk boundary states ---------------------------------------
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                      # decay from j to chunk end
+    states = jnp.einsum("bzjn,bzjh,bzjhp->bzhpn", Bc, seg * dtc, xc.astype(f32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H)
+
+    # ---- inter-chunk recurrence (the only sequential part) -----------
+    s0 = jnp.zeros((Bsz, H, P, N), f32) if init_state is None else init_state.astype(f32)
+
+    def step(s, inp):
+        dec, st = inp                                           # (B,H), (B,H,P,N)
+        s_prev = s
+        s = dec[:, :, None, None] * s + st
+        return s, s_prev
+
+    final, s_prev = jax.lax.scan(
+        step, s0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    s_prev = s_prev.swapaxes(0, 1)                              # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution to outputs --------------------------
+    y_off = jnp.einsum("bzin,bzih,bzhpn->bzihp",
+                       Cc, jnp.exp(cum), s_prev)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), final
+
+
+def ssd_decode_step(state, x, dt, A, Bv, Cv):
+    """One-token SSD update. x:(B,H,P) dt:(B,H) Bv/Cv:(B,N) state:(B,H,P,N)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))                # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(f32), Bv.astype(f32), x.astype(f32))
+    state = dA[:, :, None, None] * state + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cv.astype(f32), state)
+    return y.astype(x.dtype), state
+
+
+def apply_mamba(params, x, cfg, rc: RunConfig, state: Optional[SSMState] = None,
+                return_state: bool = False):
+    """Mamba2 block body (no residual/norm — transformer.py owns those).
+
+    x: (B,S,D). With ``state`` given and S==1 this is a decode step.
+    Returns (y, new_state | None).
+    """
+    H, P, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cdt = rc.cdtype
+
+    xv = jnp.einsum("bsd,df->bsf", x, params["in_x"])
+    zv = jnp.einsum("bsd,df->bsf", x, params["in_z"])
+    Bv = jnp.einsum("bsd,dn->bsn", x, params["in_B"])
+    Cv = jnp.einsum("bsd,dn->bsn", x, params["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["in_dt"])
+
+    tails = (None, None, None) if state is None else (state.conv_x, state.conv_B, state.conv_C)
+    xv, tx = causal_conv(xv, params["conv_x"], tails[0])
+    Bv, tb = causal_conv(Bv, params["conv_B"], tails[1])
+    Cv, tc = causal_conv(Cv, params["conv_C"], tails[2])
+    xv = jax.nn.silu(xv)
+    Bv = jax.nn.silu(Bv)
+    Cv = jax.nn.silu(Cv)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    Bsz, S, _ = x.shape
+    xh = xv.reshape(Bsz, S, H, P)
+
+    new_state = None
+    if state is not None and S == 1:
+        y, ssd = ssd_decode_step(state.ssd, xh[:, 0], dt[:, 0], A, Bv[:, 0], Cv[:, 0])
+        y = y[:, None]                                          # (B,1,H,P)
+        new_state = SSMState(ssd, tx, tb, tc)
+    else:
+        init = state.ssd if state is not None else None
+        chunk = min(rc.ssd_chunk or cfg.ssm_chunk, S)
+        while S % chunk:
+            chunk -= 1
+        y, ssd = ssd_chunked(xh, dt, A, Bv, Cv, chunk, init_state=init)
+        if return_state:
+            new_state = SSMState(ssd, tx, tb, tc)
+
+    # D skip, gate, norm, out-projection
+    y = y + params["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, H * P).astype(cdt)
+    y = y * jax.nn.silu(zv)
+    y = rms_norm(y, params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, params["out"])
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+    H, P, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W, di = cfg.ssm_conv_width, cfg.ssm_d_inner
+    return SSMState(
+        ssd=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv_x=jnp.zeros((batch, W - 1, di), dtype),
+        conv_B=jnp.zeros((batch, W - 1, N), dtype),
+        conv_C=jnp.zeros((batch, W - 1, N), dtype),
+    )

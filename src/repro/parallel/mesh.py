@@ -1,0 +1,78 @@
+"""Logical-axis rules and sharding helpers.
+
+Logical activation/param axes used across the codebase:
+  dp    batch                  -> ("pod", "data")
+  fsdp  param-storage shard    -> ("data",)   (ZeRO-3 style, gathered on use)
+  tp    tensor-parallel         -> ("model",)
+  sp    long-sequence shard     -> ("data",)   (524k KV caches, batch=1)
+
+``resolve_spec`` drops any mesh axis that does not evenly divide the
+corresponding dim, so one rule set serves every (arch x shape x mesh)
+cell without divisibility landmines (e.g. batch=1 cells simply leave
+the dp axes unused).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "dp": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "sp": ("data",),
+}
+
+
+def axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names if n in mesh.shape.keys()] or [1]))
+
+
+def resolve_spec(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+                 dims: Sequence[int], rules=None) -> P:
+    """Logical axes + concrete dims -> PartitionSpec (divisibility-checked)."""
+    rules = rules or DEFAULT_RULES
+    out = []
+    used = set()
+    for ax, dim in zip(logical_axes, dims):
+        if ax is None:
+            out.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(ax, ()) if a in mesh.shape.keys()
+                          and a not in used)
+        size = axis_size(mesh, mesh_axes)
+        if not mesh_axes or size <= 1 or dim % size != 0:
+            # try a prefix that divides (e.g. dp=("pod","data") -> ("pod",))
+            while mesh_axes and (dim % axis_size(mesh, mesh_axes) != 0):
+                mesh_axes = mesh_axes[:-1]
+            if not mesh_axes or dim % axis_size(mesh, mesh_axes) != 0:
+                out.append(None)
+                continue
+        used.update(mesh_axes)
+        out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*out)
+
+
+def make_constrain(mesh: Mesh, rules=None):
+    """RunConfig.constrain hook: constrain(x, logical_axes) -> x."""
+    def constrain(x, logical_axes):
+        if mesh is None:
+            return x
+        spec = resolve_spec(mesh, logical_axes, x.shape, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return constrain
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def pick_attn_shard(cfg, mesh: Optional[Mesh]) -> str:
+    """'heads' TP when n_heads divides the tp axis, else q-sequence TP."""
+    if mesh is None or not getattr(cfg, "n_heads", 0):
+        return "heads"
+    tp = mesh.shape.get("model", 1)
+    return "heads" if cfg.n_heads % tp == 0 else "seq"

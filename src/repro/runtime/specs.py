@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct input stand-ins per (arch, shape) cell.
+
+``input_specs`` never allocates device memory — the dry-run lowers
+against these (the shannon/kernels pattern: weak-type-correct,
+shardable placeholders).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        specs["embeds"] = _sds((B, S, cfg.d_model), "bfloat16")
+    else:
+        specs["tokens"] = _sds((B, S), "int32")
+        if cfg.frontend == "vision":
+            specs["img_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model), "bfloat16")
+    specs["labels"] = _sds((B, S), "int32")
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, B, S)
+    specs.pop("labels")
+    return specs
+
+
+def decode_batch_specs(cfg: ArchConfig, B: int) -> Dict[str, Any]:
+    if cfg.frontend == "audio":
+        return {"embeds": _sds((B, 1, cfg.d_model), "bfloat16")}
+    return {"tokens": _sds((B, 1), "int32")}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, model=None) -> Dict[str, Any]:
+    """All model inputs for one workload cell, as ShapeDtypeStructs.
+
+    For decode cells this includes the KV/SSM cache of ``shape.seq_len``
+    (the cell's definition: one new token against a cache of seq_len).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, B, S)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, B, S)}
+    if shape.kind == "decode":
+        assert model is not None, "decode specs need the model for cache shapes"
+        cache = model.init_cache_eval_shape(B, S)
+        return {"cache": cache, "batch": decode_batch_specs(cfg, B)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,116 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core.dag import Task, Workflow, add_virtual_entry_exit
+from repro.core.runner import run_experiment
+
+
+# ---------------------------------------------------------------------------
+# random-DAG strategy: layered DAGs (guaranteed acyclic, arbitrary width)
+# ---------------------------------------------------------------------------
+@st.composite
+def layered_dag(draw, max_layers=5, max_width=4):
+    n_layers = draw(st.integers(2, max_layers))
+    layers = []
+    tid = 0
+    for _ in range(n_layers):
+        width = draw(st.integers(1, max_width))
+        layers.append([f"t{tid + i}" for i in range(width)])
+        tid += width
+    tasks = {}
+    for li, layer in enumerate(layers):
+        for name in layer:
+            inputs = []
+            if li > 0:
+                prev = layers[li - 1]
+                # every task gets >= 1 parent from the previous layer
+                n_par = draw(st.integers(1, len(prev)))
+                inputs = sorted(draw(st.permutations(prev))[:n_par])
+            tasks[name] = Task(id=name, inputs=inputs, duration_s=2.0)
+    for t in tasks.values():
+        for dep in t.inputs:
+            tasks[dep].outputs.append(t.id)
+    return Workflow("prop", add_virtual_entry_exit(tasks))
+
+
+@given(layered_dag())
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_topo_order_is_valid_linearization(wf):
+    order = wf.topo_order()
+    pos = {t: i for i, t in enumerate(order)}
+    assert len(order) == len(wf.tasks)
+    for t in wf.tasks.values():
+        for dep in t.inputs:
+            assert pos[dep] < pos[t.id]
+
+
+@given(layered_dag())
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_levels_partition_and_respect_deps(wf):
+    levels = wf.levels()
+    seen = set()
+    flat = [t for lv in levels for t in lv]
+    assert sorted(flat) == sorted(wf.tasks)
+    for lv in levels:
+        for t in lv:
+            assert all(d in seen for d in wf.tasks[t].inputs)
+        seen.update(lv)
+
+
+@given(layered_dag(), st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_engine_order_consistent_on_random_dags(wf, seed):
+    """THE paper property: for any DAG and any scheduler disorder seed,
+    KubeAdaptor's execution is a dependency-consistent linearization."""
+    res = run_experiment("kubeadaptor", wf, repeats=1, seed=seed,
+                         sample_resources=False)
+    assert res.metrics.order_consistent(wf.with_instance(0))
+    rec = res.metrics.wf_record(wf.with_instance(0))
+    assert rec.ns_deleted > rec.ns_created > 0
+
+
+@given(layered_dag(), st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_resource_accounting_invariants(wf, seed):
+    """Node usage never negative, never above allocatable, and returns
+    to zero after all workflows finish (conservation)."""
+    res = run_experiment("kubeadaptor", wf, repeats=1, seed=seed)
+    for node in res.cluster.nodes.values():
+        assert node.cpu_used == 0 and node.mem_used == 0     # all released
+    cpu_a, mem_a = res.cluster.allocatable()
+    for _, cpu, mem in res.metrics.samples:
+        assert 0 <= cpu <= cpu_a and 0 <= mem <= mem_a
+
+
+@given(layered_dag())
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_informer_cache_coherent_after_run(wf):
+    """After the sim drains, the informer cache mirrors the cluster."""
+    res = run_experiment("kubeadaptor", wf, repeats=1, seed=0,
+                         sample_resources=False)
+    inf = res.engine.inf
+    assert set(inf.pods.cache.keys()) == set(res.cluster.pods.keys())
+    assert set(inf.namespaces.cache.keys()) == set(res.cluster.namespaces.keys())
+    assert len(res.cluster.pods) == 0          # everything cleaned up
+
+
+@given(layered_dag(), st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_volume_carries_all_data_dependencies(wf, seed):
+    """Every task's payload must see its dependencies' outputs in the
+    shared volume (PV/NFS analogue) — checked via stress_payload wiring."""
+    from repro.core.payloads import stress_payload
+    import dataclasses
+    tasks = {tid: dataclasses.replace(t, payload=stress_payload)
+             for tid, t in wf.tasks.items()}
+    wf2 = Workflow("prop", tasks)
+    res = run_experiment("kubeadaptor", wf2, repeats=1, seed=seed,
+                         sample_resources=False)
+    assert res.metrics.order_consistent(wf2.with_instance(0))

@@ -1,0 +1,201 @@
+"""End-to-end behaviour of the KubeAdaptor system vs the paper's claims."""
+import pytest
+
+from repro.configs.workflows import WORKFLOWS, get_workflow_spec
+from repro.core.dag import make_workflow
+from repro.core.runner import run_experiment
+
+ALL_WF = sorted(WORKFLOWS)
+
+
+def _wf(name):
+    return make_workflow(name, get_workflow_spec(name))
+
+
+def _stack(seed=10):
+    """Fresh full KubeAdaptor stack for fine-grained tests."""
+    from repro.core.cluster import Cluster
+    from repro.core.engine import KubeAdaptorEngine
+    from repro.core.events import EventRegistry
+    from repro.core.informer import InformerSet
+    from repro.core.injector import WorkflowInjector
+    from repro.core.metrics import MetricsCollector
+    from repro.core.sim import Sim
+    from repro.core.volumes import VolumeManager
+
+    sim = Sim()
+    cluster = Cluster(sim, seed=seed)
+    informers = InformerSet(sim, cluster)
+    events = EventRegistry(sim)
+    volumes = VolumeManager(sim, cluster)
+    metrics = MetricsCollector(sim, cluster)
+    engine = KubeAdaptorEngine(sim, cluster, informers, events, volumes, metrics)
+    return sim, cluster, engine, metrics, WorkflowInjector
+
+
+# --------------------------------------------------------------------------
+# Scheduling-order consistency (paper Fig 6 + the motivation Fig 1)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_WF)
+def test_kubeadaptor_order_consistency(name):
+    wf = _wf(name)
+    res = run_experiment("kubeadaptor", wf, repeats=2, seed=7)
+    for i in range(2):
+        assert res.metrics.order_consistent(wf.with_instance(i))
+
+
+def test_direct_submission_violates_dependencies():
+    """Fig 1: throwing all pods at the K8s scheduler breaks the DAG order
+    (tasks start before their dependencies finished)."""
+    wf = _wf("epigenomics")       # deep pipelines -> violations guaranteed
+    res = run_experiment("direct", wf, repeats=1, seed=3)
+    assert not res.metrics.order_consistent(wf.with_instance(0))
+
+
+@pytest.mark.parametrize("engine", ["batchjob", "argo"])
+def test_baselines_respect_dependencies(engine):
+    # level-sync and reconcile approaches are slow but still dependency-safe
+    wf = _wf("montage")
+    res = run_experiment(engine, wf, repeats=1, seed=5)
+    assert res.metrics.order_consistent(wf.with_instance(0))
+
+
+# --------------------------------------------------------------------------
+# Lifecycle / exec-time reproduction (Figs 7, 8)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_WF)
+def test_lifecycle_reproduces_paper(name, paper_numbers):
+    wf = _wf(name)
+    for engine, target in paper_numbers["lifecycle"][name].items():
+        res = run_experiment(engine, wf, repeats=2, seed=1)
+        got = res.metrics.avg_lifecycle(name)
+        assert got == pytest.approx(target, rel=0.12), (engine, got, target)
+
+
+@pytest.mark.parametrize("name", ALL_WF)
+def test_task_exec_time_reproduces_paper(name, paper_numbers):
+    wf = _wf(name)
+    res = run_experiment("kubeadaptor", wf, repeats=2, seed=1)
+    got = res.metrics.avg_pod_exec_time(name)
+    assert got == pytest.approx(paper_numbers["exec"][name], rel=0.05)
+
+
+@pytest.mark.parametrize("name", ALL_WF)
+def test_kubeadaptor_beats_baselines(name):
+    wf = _wf(name)
+    life, ex = {}, {}
+    for engine in ("kubeadaptor", "batchjob", "argo"):
+        res = run_experiment(engine, wf, repeats=2, seed=2)
+        life[engine] = res.metrics.avg_lifecycle(name)
+        ex[engine] = res.metrics.avg_pod_exec_time(name)
+    assert life["kubeadaptor"] < life["batchjob"] < life["argo"]
+    assert ex["kubeadaptor"] < ex["batchjob"]
+    assert ex["kubeadaptor"] < ex["argo"]
+    red = 1 - life["kubeadaptor"] / life["argo"]
+    assert red > 0.35, red       # headline: ~43-49% lifecycle reduction
+
+
+def test_apiserver_pressure_reduced_by_informer():
+    wf = _wf("montage")
+    kube = run_experiment("kubeadaptor", wf, repeats=2, seed=4).api_calls
+    batch = run_experiment("batchjob", wf, repeats=2, seed=4).api_calls
+    argo = run_experiment("argo", wf, repeats=2, seed=4).api_calls
+    assert kube < batch and kube < argo
+
+
+# --------------------------------------------------------------------------
+# Resource usage (Figs 9-14)
+# --------------------------------------------------------------------------
+def test_resource_usage_rate_ordering():
+    wf = _wf("cybershake")
+    rates = {}
+    for engine in ("kubeadaptor", "batchjob", "argo"):
+        res = run_experiment(engine, wf, repeats=1, seed=6)
+        rates[engine] = res.metrics.first_lifecycle_usage("cybershake")
+    assert rates["kubeadaptor"][0] > rates["batchjob"][0] > rates["argo"][0]
+    assert rates["kubeadaptor"][1] > rates["argo"][1]
+
+
+def test_resource_usage_never_exceeds_allocatable():
+    wf = _wf("cybershake")
+    res = run_experiment("kubeadaptor", wf, repeats=2, seed=8)
+    cpu_a, mem_a = res.cluster.allocatable()
+    for _, cpu, mem in res.metrics.samples:
+        assert 0 <= cpu <= cpu_a
+        assert 0 <= mem <= mem_a
+
+
+# --------------------------------------------------------------------------
+# Fault tolerance (§4.5) + straggler mitigation
+# --------------------------------------------------------------------------
+def test_pod_failure_recovery():
+    from repro.core.cluster import RUNNING
+    sim, cluster, engine, metrics, Injector = _stack(11)
+    wf = _wf("ligo")
+    injector = Injector(sim, engine.submit)
+    engine.on_workflow_done = injector.request_next
+    injector.load([wf.with_instance(0)])
+    injector.start()
+    sim.after(20.0, lambda: next(
+        (cluster.fail_pod(p.namespace, p.name)
+         for p in cluster.list_pods() if p.phase == RUNNING), None))
+    sim.run(until=100000)
+    rec = metrics.wf_record(wf.with_instance(0))
+    assert rec.ns_deleted > 0, "workflow did not complete after failure"
+    assert rec.retries >= 1
+    assert metrics.order_consistent(wf.with_instance(0))
+
+
+def test_node_failure_recovery():
+    sim, cluster, engine, metrics, Injector = _stack(12)
+    wf = _wf("cybershake")
+    injector = Injector(sim, engine.submit)
+    engine.on_workflow_done = injector.request_next
+    injector.load([wf.with_instance(0)])
+    injector.start()
+    sim.after(25.0, lambda: cluster.fail_node("node3"))
+    sim.run(until=100000)
+    rec = metrics.wf_record(wf.with_instance(0))
+    assert rec.ns_deleted > 0, "workflow did not survive node failure"
+
+
+def test_straggler_speculative_execution():
+    sim, cluster, engine, metrics, Injector = _stack(13)
+    engine.speculative = True
+    cluster.nodes["node1"].slow_factor = 30.0      # a straggling node
+    wf = _wf("epigenomics")
+    injector = Injector(sim, engine.submit)
+    engine.on_workflow_done = injector.request_next
+    injector.load([wf.with_instance(0)])
+    injector.start()
+    sim.run(until=100000)
+    rec = metrics.wf_record(wf.with_instance(0))
+    assert rec.ns_deleted > 0
+    # a straggling pod (300 s) would push the lifecycle past 400 s
+    assert rec.lifecycle < 400, rec.lifecycle
+
+
+# --------------------------------------------------------------------------
+# 100-run totals (paper §5.3) — scaled to 10 runs for CI, same ordering
+# --------------------------------------------------------------------------
+def test_total_time_over_repeated_runs():
+    wf = _wf("montage")
+    totals = {}
+    for engine in ("kubeadaptor", "batchjob", "argo"):
+        res = run_experiment(engine, wf, repeats=10, seed=9)
+        totals[engine] = res.metrics.total_time("montage")
+    assert totals["kubeadaptor"] < totals["batchjob"] < totals["argo"]
+
+
+def test_level1_scheduler_is_pluggable():
+    from repro.core.schedulers import LongestPathScheduler
+    sim, cluster, engine, metrics, Injector = _stack(14)
+    engine.scheduler_cls = LongestPathScheduler
+    wf = _wf("montage")
+    injector = Injector(sim, engine.submit)
+    engine.on_workflow_done = injector.request_next
+    injector.load([wf.with_instance(0)])
+    injector.start()
+    sim.run(until=100000)
+    assert metrics.wf_record(wf.with_instance(0)).ns_deleted > 0
+    assert metrics.order_consistent(wf.with_instance(0))
