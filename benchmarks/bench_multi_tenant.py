@@ -1,0 +1,102 @@
+"""Multi-tenant control plane sweep: tenants x arrival process x
+admission policy (beyond-paper; the serialized paper experiment is one
+point of this space).
+
+Each scenario runs N identical tenants of wide fan-out workflows on a
+2-node cluster (admission-bound), and reports per-policy makespan
+spread, queueing delay, and deferral counts. The ``fairness`` rows
+additionally report the contended-CPU ratio between a weight-3 tenant
+and a weight-1 tenant — ~1 under fifo, >1.5 under fair-share.
+"""
+import time
+
+from benchmarks.common import row, wf
+from repro.configs.workflows import wide_fanout
+from repro.core import calibration as cal
+from repro.core.dag import make_workflow
+from repro.core.runner import ControlPlane
+
+POLICIES = ("fifo", "priority", "fair-share")
+ARRIVALS = ("serial", "concurrent", "poisson")
+TENANT_COUNTS = (2, 4)
+SMALL_CLUSTER = cal.PaperCluster(n_nodes=2)
+
+
+def wide_wf(name):
+    return make_workflow(name, wide_fanout())
+
+
+def _stream_kwargs(arrival, i):
+    if arrival == "serial":
+        return {"arrival": "serial"}
+    if arrival == "concurrent":
+        return {"arrival": "concurrent", "concurrency": 2}
+    return {"arrival": "poisson", "rate": 0.05, "burst": 1}
+
+
+def sweep(n_tenants, arrival, policy, repeats=3, seed=7):
+    plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                         cluster_cfg=SMALL_CLUSTER, seed=seed)
+    for i in range(n_tenants):
+        plane.add_stream(wide_wf(f"t{i}"), repeats=repeats,
+                         tenant=f"tenant{i}", priority=n_tenants - i,
+                         weight=float(n_tenants - i),
+                         **_stream_kwargs(arrival, i))
+    res = plane.run(horizon_s=500_000)
+    return res
+
+
+def run():
+    rows = []
+    for n in TENANT_COUNTS:
+        for arrival in ARRIVALS:
+            for policy in POLICIES:
+                t0 = time.perf_counter()
+                res = sweep(n, arrival, policy)
+                wall = (time.perf_counter() - t0) * 1e6
+                s = res.metrics.tenant_summary()
+                spans = [s[t]["makespan"] for t in sorted(s)]
+                delays = [s[t]["avg_queue_delay"] for t in sorted(s)]
+                rows.append(row(
+                    f"mt_{n}tenants_{arrival}_{policy}", wall,
+                    f"makespan_max_s={max(spans):.1f};"
+                    f"makespan_min_s={min(spans):.1f};"
+                    f"avg_queue_delay_s={sum(delays)/len(delays):.2f};"
+                    f"deferrals={res.arbiter.deferrals};"
+                    f"admitted={res.arbiter.admitted}"))
+
+    # fairness focus: weight-3 vs weight-1 contended CPU ratio per policy
+    for policy in POLICIES:
+        t0 = time.perf_counter()
+        plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                             cluster_cfg=SMALL_CLUSTER, seed=5)
+        plane.add_stream(wide_wf("heavy"), repeats=4, tenant="heavy",
+                         arrival="concurrent", concurrency=2,
+                         weight=3.0, priority=10)
+        plane.add_stream(wide_wf("light"), repeats=4, tenant="light",
+                         arrival="concurrent", concurrency=2,
+                         weight=1.0, priority=0)
+        res = plane.run(horizon_s=500_000)
+        wall = (time.perf_counter() - t0) * 1e6
+        avg = res.metrics.contended_cpu(["heavy", "light"])
+        ratio = avg["heavy"] / max(avg["light"], 1) if avg else float("nan")
+        s = res.metrics.tenant_summary()
+        rows.append(row(
+            f"mt_fairness_{policy}", wall,
+            f"cpu_ratio_3to1={ratio:.2f};"
+            f"heavy_makespan_s={s['heavy']['makespan']:.1f};"
+            f"light_makespan_s={s['light']['makespan']:.1f}"))
+
+    # paper workflows as a multi-tenant mix (sanity: realistic DAGs)
+    t0 = time.perf_counter()
+    plane = ControlPlane("kubeadaptor", admission_policy="fair-share", seed=3)
+    for i, name in enumerate(("montage", "cybershake")):
+        plane.add_stream(wf(name), repeats=3, tenant=f"paper{i}",
+                         arrival="concurrent", concurrency=2)
+    res = plane.run(horizon_s=500_000)
+    wall = (time.perf_counter() - t0) * 1e6
+    s = res.metrics.tenant_summary()
+    rows.append(row(
+        "mt_paper_mix_fair_share", wall,
+        ";".join(f"{t}_makespan_s={s[t]['makespan']:.1f}" for t in sorted(s))))
+    return rows

@@ -16,26 +16,28 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import (bench_consistency, bench_engine_micro,
-                            bench_kernels, bench_lifecycle,
-                            bench_resource_usage, bench_schedulers,
-                            bench_task_exec, roofline)
+    import importlib
+
+    # modules are imported lazily so e.g. `--only multi_tenant` (pure
+    # control-plane DES) never imports the jax-dependent kernel benches
     modules = [
-        ("consistency", bench_consistency),
-        ("task_exec", bench_task_exec),
-        ("lifecycle", bench_lifecycle),
-        ("resource_usage", bench_resource_usage),
-        ("engine_micro", bench_engine_micro),
-        ("schedulers", bench_schedulers),
-        ("kernels", bench_kernels),
-        ("roofline", roofline),
+        ("consistency", "bench_consistency"),
+        ("task_exec", "bench_task_exec"),
+        ("lifecycle", "bench_lifecycle"),
+        ("resource_usage", "bench_resource_usage"),
+        ("engine_micro", "bench_engine_micro"),
+        ("schedulers", "bench_schedulers"),
+        ("multi_tenant", "bench_multi_tenant"),
+        ("kernels", "bench_kernels"),
+        ("roofline", "roofline"),
     ]
     print("name,us_per_call,derived")
     failed = 0
-    for name, mod in modules:
+    for name, modname in modules:
         if args.only and args.only not in name:
             continue
         try:
+            mod = importlib.import_module(f"benchmarks.{modname}")
             for line in mod.run():
                 print(line, flush=True)
         except Exception as e:  # noqa: BLE001 — report and continue

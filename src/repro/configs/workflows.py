@@ -125,3 +125,53 @@ WORKFLOWS = {
 
 def get_workflow_spec(name: str) -> Dict[str, Dict]:
     return WORKFLOWS[name]()
+
+
+# ---------------------------------------------------------------------------
+# Synthetic admission-pressure workload (beyond-paper): a src -> N-wide
+# fan-out -> sink DAG that keeps many tasks ready at once, unlike the
+# paper DAGs whose narrow phases gate demand. ConfigMap format, so it
+# parses through the same path as the scientific workflows.
+# ---------------------------------------------------------------------------
+def wide_fanout(width: int = 24, duration_s: float = 8.0) -> Dict[str, Dict]:
+    secs = str(duration_s / 2.0)            # stress -t secs -> 2x busy time
+    spec = {"src": _node([], []), "sink": _node([], [])}
+    spec["src"]["args"] = spec["sink"]["args"] = \
+        ["-c", "1", "-m", "100", "-t", "0.25"]
+    for i in range(width):
+        w = f"w{i}"
+        spec[w] = _node(["src"], ["sink"])
+        spec[w]["args"] = ["-c", "1", "-m", "100", "-t", secs]
+        spec["src"]["output"].append(w)
+        spec["sink"]["input"].append(w)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant scenario presets (beyond-paper): named stream mixes for the
+# ControlPlane builder. Each entry is a list of add_stream kwargs minus the
+# workflow object itself — resolve "workflow" names via get_workflow_spec.
+# ---------------------------------------------------------------------------
+TENANT_SCENARIOS: Dict[str, List[Dict]] = {
+    # the paper's experiment, expressed as one serial default-tenant stream
+    "paper-serial": [
+        {"workflow": "montage", "repeats": 2, "tenant": "default",
+         "arrival": "serial"},
+    ],
+    # two equal tenants racing fixed-concurrency streams
+    "duel": [
+        {"workflow": "montage", "repeats": 3, "tenant": "alice",
+         "arrival": "concurrent", "concurrency": 2, "weight": 1.0},
+        {"workflow": "cybershake", "repeats": 3, "tenant": "bob",
+         "arrival": "concurrent", "concurrency": 2, "weight": 1.0},
+    ],
+    # a heavy production tenant vs a bursty best-effort tenant
+    "prod-vs-burst": [
+        {"workflow": "ligo", "repeats": 4, "tenant": "prod",
+         "arrival": "concurrent", "concurrency": 2,
+         "priority": 10, "weight": 3.0},
+        {"workflow": "epigenomics", "repeats": 4, "tenant": "burst",
+         "arrival": "poisson", "rate": 0.05, "burst": 2,
+         "priority": 0, "weight": 1.0},
+    ],
+}

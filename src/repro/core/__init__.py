@@ -4,12 +4,18 @@ from repro.core.calibration import (DEFAULT_CLUSTER, DEFAULT_PARAMS,
 from repro.core.cluster import Cluster, PodObj
 from repro.core.dag import Task, Workflow, make_workflow, parse_configmap
 from repro.core.engine import KubeAdaptorEngine
-from repro.core.runner import ENGINES, RunResult, run_experiment
+from repro.core.injector import StreamSpec, WorkflowGateway, WorkflowInjector
+from repro.core.resources import (ADMISSION_POLICIES, AdmissionArbiter,
+                                  ResourceGatherer)
+from repro.core.runner import (ENGINES, ControlPlane, RunResult,
+                               run_experiment)
 from repro.core.sim import Sim
 
 __all__ = [
     "ClusterParams", "PaperCluster", "DEFAULT_PARAMS", "DEFAULT_CLUSTER",
     "Cluster", "PodObj", "Task", "Workflow", "make_workflow",
     "parse_configmap", "KubeAdaptorEngine", "ENGINES", "RunResult",
-    "run_experiment", "Sim",
+    "run_experiment", "Sim", "ControlPlane", "StreamSpec", "WorkflowGateway",
+    "WorkflowInjector", "AdmissionArbiter", "ResourceGatherer",
+    "ADMISSION_POLICIES",
 ]

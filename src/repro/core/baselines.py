@@ -89,7 +89,7 @@ class BatchJobEngine(_TrackingMixin):
         ns = wf.namespace()
         ws = {"wf": wf, "levels": wf.levels(), "level": 0, "pvc": None}
         self._by_ns[ns] = ws
-        self.metrics.wf_record(wf)
+        self.metrics.note_submitted(wf)
         # kubectl create namespace && kubectl apply pvc
         self.sim.after(self.p.kubectl_latency, lambda: self.cluster.create_namespace(
             ns, cb=lambda _n: self._ns_ready(ws)))
@@ -201,7 +201,7 @@ class ArgoLikeEngine(_TrackingMixin):
         ws = {"wf": wf, "completed": set(), "created": set(),
               "to_create": [], "pvc": None, "done": False}
         self._by_ns[ns] = ws
-        self.metrics.wf_record(wf)
+        self.metrics.note_submitted(wf)
         # CRD submission + controller pickup
         self.sim.after(self.p.argo_workflow_init,
                        lambda: self.cluster.create_namespace(
@@ -297,7 +297,7 @@ class DirectSubmitEngine(_TrackingMixin):
         ns = wf.namespace()
         ws = {"wf": wf, "deleted": set(), "done": False}
         self._by_ns[ns] = ws
-        self.metrics.wf_record(wf)
+        self.metrics.note_submitted(wf)
         self.cluster.create_namespace(ns, cb=lambda _n: self._all_in(ws))
 
     def _all_in(self, ws):

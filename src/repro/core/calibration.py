@@ -45,6 +45,9 @@ class ClusterParams:
     argo_workflow_init: float = 2.0    # CRD submission + controller pickup
     # fault tolerance / stragglers
     max_retries: int = 3
+    create_retry_backoff: float = 0.25  # wait before re-creating after
+                                        # AlreadyExists delete+retry (§4.5);
+                                        # avoids hot-looping the apiserver
     straggler_factor: float = 1.5      # speculative copy beyond x expected
     straggler_min_wait: float = 5.0
     # metrics

@@ -42,6 +42,7 @@ class Workflow:
     name: str
     tasks: Dict[str, Task]
     instance: int = 0          # repeat index (namespace uniquifier)
+    tenant: str = "default"    # owning tenant (multi-tenant control plane)
 
     def __post_init__(self):
         self.validate()
@@ -97,10 +98,16 @@ class Workflow:
         return len(self.levels())
 
     def namespace(self) -> str:
+        if self.tenant != "default":
+            return f"wf-{self.tenant}-{self.name}-{self.instance}"
         return f"wf-{self.name}-{self.instance}"
 
     def with_instance(self, i: int) -> "Workflow":
-        return Workflow(self.name, self.tasks, instance=i)
+        return Workflow(self.name, self.tasks, instance=i, tenant=self.tenant)
+
+    def with_tenant(self, tenant: str) -> "Workflow":
+        return Workflow(self.name, self.tasks, instance=self.instance,
+                        tenant=tenant)
 
     def total_requests(self):
         cpu = sum(t.resource_request()[0] for t in self.tasks.values())

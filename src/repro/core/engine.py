@@ -20,6 +20,21 @@ Modules, mapped 1:1 to the paper's architecture diagram (Fig 3):
   * straggler mitigation       — optional speculative twin when a pod
                                  overruns straggler_factor x expected
                                  (beyond-paper, for the 1000-node brief)
+
+Multi-tenant control plane (beyond-paper). The engine is one stage of
+
+    WorkflowGateway ──submit──▶ KubeAdaptorEngine ──request──▶ AdmissionArbiter
+      (N streams,                 (per-workflow state,           (shared headroom,
+       arrival processes)          event-trigger chain)           fifo/priority/
+           ▲                                                      fair-share)
+           └────────────── workflow-complete ◀────────────────────────┘
+
+The arbiter is a single shared instance: every ``_submit_ready`` files
+admission *requests* instead of self-servicing headroom, so concurrent
+workflows from many tenants contend under a pluggable policy, and any
+pod deletion (any tenant) re-evaluates the pending queue. Tenancy
+knobs (per-tenant priority / fair-share weight) are registered on the
+arbiter by the ControlPlane builder in core/runner.py.
 """
 from __future__ import annotations
 
@@ -33,7 +48,7 @@ from repro.core.dag import Task, Workflow
 from repro.core.events import EventRegistry
 from repro.core.informer import InformerSet
 from repro.core.metrics import MetricsCollector
-from repro.core.resources import ResourceGatherer
+from repro.core.resources import AdmissionArbiter
 from repro.core.schedulers import TopologicalScheduler
 from repro.core.sim import Sim
 from repro.core.volumes import VolumeManager
@@ -42,6 +57,7 @@ from repro.core.volumes import VolumeManager
 @dataclass
 class WorkflowState:
     wf: Workflow
+    scheduler: Optional[object] = None                  # level-1 order source
     pvc: Optional[str] = None
     created: Set[str] = field(default_factory=set)      # tasks with live pods
     completed: Set[str] = field(default_factory=set)    # deps satisfied
@@ -63,6 +79,7 @@ class KubeAdaptorEngine:
                  params: cal.ClusterParams = cal.DEFAULT_PARAMS,
                  scheduler_cls=TopologicalScheduler,
                  speculative: bool = False,
+                 arbiter: Optional[AdmissionArbiter] = None,
                  on_workflow_done: Optional[Callable] = None):
         self.sim = sim
         self.cluster = cluster
@@ -73,6 +90,7 @@ class KubeAdaptorEngine:
         self.p = params
         self.scheduler_cls = scheduler_cls
         self.speculative = speculative
+        self.arbiter = arbiter if arbiter is not None else AdmissionArbiter(informers)
         self.on_workflow_done = on_workflow_done
         self._ws: Dict[str, WorkflowState] = {}
         self._started = False
@@ -110,6 +128,7 @@ class KubeAdaptorEngine:
 
     def _pod_deleted(self, pod: PodObj):
         if pod.labels.get("engine") == self.name:
+            self.arbiter.pod_removed(pod)
             self.events.emit("pod-removed", pod)
 
     # ------------------------------------------------------------------ #
@@ -117,10 +136,9 @@ class KubeAdaptorEngine:
     # ------------------------------------------------------------------ #
     def submit(self, wf: Workflow):
         self.start()
-        ws = WorkflowState(wf=wf)
-        ws.scheduler = self.scheduler_cls(wf)     # type: ignore[attr-defined]
+        ws = WorkflowState(wf=wf, scheduler=self.scheduler_cls(wf))
         self._ws[ws.ns] = ws
-        self.metrics.wf_record(wf)
+        self.metrics.note_submitted(wf)
         self.cluster.create_namespace(ws.ns, cb=lambda _ns: self._ns_ready(ws))
 
     def _ns_ready(self, ws: WorkflowState):
@@ -137,19 +155,27 @@ class KubeAdaptorEngine:
                 continue
             if all(d in ws.completed for d in t.inputs):
                 out.append(tid)
-        return ws.scheduler.order_ready(out)      # type: ignore[attr-defined]
+        return ws.scheduler.order_ready(out)
 
     def _submit_ready(self, ws: WorkflowState):
         if ws.done:
             return
         ready = [ws.wf.tasks[t] for t in self._ready_tasks(ws)]
-        gatherer = ResourceGatherer(self.inf)
-        for task in gatherer.admit(ready):
-            self._create_pod(ws, task)
+        self.arbiter.submit(ws.ns, ws.wf.tenant, ready,
+                            lambda task: self._admitted(ws, task))
+
+    def _admitted(self, ws: WorkflowState, task: Task) -> bool:
+        # a grant may arrive after the workflow moved on (late wake-up);
+        # the False return tells the arbiter not to count the grant
+        if ws.done or task.id in ws.created or task.id in ws.completed:
+            return False
+        self._create_pod(ws, task)
+        return True
 
     def _create_pod(self, ws: WorkflowState, task: Task, twin: bool = False):
         name = task.id + ("-twin" if twin else "")
-        labels = {"engine": self.name, "task": task.id}
+        labels = {"engine": self.name, "task": task.id,
+                  "tenant": ws.wf.tenant}
         if task.virtual:
             labels["virtual"] = "1"
         if twin:
@@ -164,6 +190,10 @@ class KubeAdaptorEngine:
                      duration_s=task.run_time(), payload=payload,
                      volume=ws.pvc, labels=labels)
         ws.created.add(task.id)
+        # charge headroom until the informer observes the pod — retried
+        # pods and twins bypass admission but must not double-spend
+        self.arbiter.reserve(ws.ns, name, ws.wf.tenant, cpu, mem)
+        self.metrics.note_first_create(ws.wf)
         self.cluster.create_pod(
             pod,
             error_cb=lambda reason, existing: self._on_create_error(
@@ -171,11 +201,13 @@ class KubeAdaptorEngine:
 
     def _on_create_error(self, ws: WorkflowState, task: Task, reason: str,
                          existing: PodObj):
-        # §4.5: duplicate pod -> destroy it, then request creation again
+        # §4.5: duplicate pod -> destroy it, back off, request creation again
         if reason == "AlreadyExists":
             self.cluster.delete_pod(
                 ws.ns, existing.name,
-                cb=lambda _p: self._create_pod(ws, task))
+                cb=lambda _p: self.sim.after(
+                    self.p.create_retry_backoff,
+                    lambda: self._create_pod(ws, task)))
         elif reason == "NamespaceNotFound" and not ws.done:
             self.cluster.create_namespace(
                 ws.ns, cb=lambda _ns: self._create_pod(ws, task))
@@ -257,6 +289,7 @@ class KubeAdaptorEngine:
     # ------------------------------------------------------------------ #
     def _workflow_complete(self, ws: WorkflowState):
         ws.done = True
+        self.arbiter.forget_namespace(ws.ns)
 
         def ns_gone(_ns):
             self.metrics.note_ns_deleted(ws.wf)

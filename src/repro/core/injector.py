@@ -1,28 +1,53 @@
-"""Workflow injection module (§4.4) — the gRPC-fed side-car.
+"""Workflow injection (§4.4) — from serial side-car to multi-tenant gateway.
 
-Components map to the paper's module: the Workflow Parser reads
-ConfigMap JSON (configs/workflows.py), the Workflow Sending Module
-pushes one workflow at a time over the in-process "gRPC" channel
-(a small fixed latency), and the Next Workflow Trigger Module responds
-to the engine's completion events by sending the next instance.
+The paper's injector maps to three sub-modules: the Workflow Parser
+reads ConfigMap JSON (configs/workflows.py), the Workflow Sending
+Module pushes workflows over the in-process "gRPC" channel (a small
+fixed latency), and the Next Workflow Trigger Module responds to the
+engine's completion events by sending the next instance.
+
+Two front-ends share that machinery:
+
+* ``WorkflowInjector`` — the paper's strictly-serial injector, kept
+  verbatim for the single-stream reproduction experiments.
+* ``WorkflowGateway`` — the multi-tenant generalization: N concurrent
+  *streams* (one queue per tenant workload), each with a pluggable
+  arrival process:
+
+    serial      next-trigger, exactly the paper's behaviour
+    concurrent  keep ``concurrency`` instances of the stream in flight
+    poisson     seeded exponential inter-arrival times at ``rate``/s,
+                ``burst`` instances per arrival, independent of
+                completions (open-loop traffic)
+
+  Streams are drained from ``collections.deque`` (O(1) pops); the
+  gateway allocates globally unique instance ids per workflow name so
+  namespaces and metric keys never collide across tenants.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.dag import Workflow, make_workflow
 from repro.core.sim import Sim
 
 GRPC_LATENCY = 0.02
 
+ARRIVAL_MODES = ("serial", "concurrent", "poisson")
+
 
 class WorkflowInjector:
+    """The paper's serial injector: one workflow in flight at a time."""
+
     def __init__(self, sim: Sim, send_to: Callable[[Workflow], None],
                  grpc_latency: float = GRPC_LATENCY):
         self.sim = sim
         self.send_to = send_to
         self.grpc_latency = grpc_latency
-        self.queue: List[Workflow] = []
+        self.queue: Deque[Workflow] = deque()
         self.sent = 0
         self.on_drained: Optional[Callable[[], None]] = None
 
@@ -44,10 +69,168 @@ class WorkflowInjector:
             if self.on_drained:
                 self.on_drained()
             return
-        wf = self.queue.pop(0)
+        wf = self.queue.popleft()
         self.sent += 1
         self.sim.after(self.grpc_latency, lambda: self.send_to(wf))
 
     # -- next-workflow trigger ----------------------------------------------
     def request_next(self, _wf: Optional[Workflow] = None):
         self._send_next()
+
+
+@dataclass
+class StreamSpec:
+    """One tenant workload: a workflow repeated under an arrival process."""
+
+    workflow: Workflow
+    repeats: int = 1
+    tenant: str = "default"
+    arrival: str = "serial"        # serial | concurrent | poisson
+    concurrency: int = 1           # in-flight cap for "concurrent"
+    rate: float = 1.0              # arrivals per second for "poisson"
+    burst: int = 1                 # instances per poisson arrival
+    priority: int = 0              # admission priority (higher wins)
+    weight: float = 1.0            # fair-share weight
+
+    def __post_init__(self):
+        if self.arrival not in ARRIVAL_MODES:
+            raise ValueError(f"unknown arrival mode {self.arrival!r}; "
+                             f"expected one of {ARRIVAL_MODES}")
+        if self.arrival == "poisson" and self.rate <= 0:
+            raise ValueError("poisson arrival needs rate > 0")
+        if self.concurrency < 1 or self.burst < 1 or self.repeats < 0:
+            raise ValueError("concurrency/burst must be >= 1, repeats >= 0")
+
+
+class _Stream:
+    def __init__(self, spec: StreamSpec, queue: Deque[Workflow]):
+        self.spec = spec
+        self.queue = queue
+        self.in_flight = 0
+        self.sent = 0
+
+    def drained(self) -> bool:
+        return not self.queue and self.in_flight == 0
+
+
+class WorkflowGateway:
+    """Multi-stream workflow source feeding one engine ``submit``.
+
+    The engine's ``on_workflow_done`` must be wired to
+    :meth:`workflow_done`; the gateway routes each completion back to
+    the owning stream (closed-loop modes) and fires ``on_drained`` once
+    every stream's queue is empty and nothing is in flight.
+    """
+
+    def __init__(self, sim: Sim, send_to: Callable[[Workflow], None],
+                 grpc_latency: float = GRPC_LATENCY, seed: int = 0):
+        self.sim = sim
+        self.send_to = send_to
+        self.grpc_latency = grpc_latency
+        self.rng = random.Random(seed)
+        self.streams: List[_Stream] = []
+        self.sent = 0
+        self.on_drained: Optional[Callable[[], None]] = None
+        self._by_ns: Dict[str, _Stream] = {}
+        self._instances: Dict[str, int] = {}     # workflow name -> next id
+        self._started = False
+
+    # -- stream registration ----------------------------------------------
+    def add_stream(self, spec: StreamSpec) -> StreamSpec:
+        base = spec.workflow
+        if base.tenant != spec.tenant:
+            base = base.with_tenant(spec.tenant)
+        q: Deque[Workflow] = deque()
+        for _ in range(spec.repeats):
+            nxt = self._instances.get(base.name, 0)
+            self._instances[base.name] = nxt + 1
+            q.append(base.with_instance(nxt))
+        stream = _Stream(spec, q)
+        self.streams.append(stream)
+        if self._started:
+            self._kick(stream)
+        return spec
+
+    def load(self, workflows: List[Workflow], **spec_kw):
+        """Convenience: one serial stream over an explicit instance list."""
+        if not workflows:
+            return
+        spec = StreamSpec(workflow=workflows[0], repeats=0, **spec_kw)
+        stream = _Stream(spec, deque(workflows))
+        for wf in workflows:
+            nxt = self._instances.get(wf.name, 0)
+            self._instances[wf.name] = max(nxt, wf.instance + 1)
+        self.streams.append(stream)
+        if self._started:
+            self._kick(stream)
+
+    # -- sending module ----------------------------------------------------
+    def start(self):
+        if self._started:
+            return
+        self._started = True
+        for stream in self.streams:
+            self._kick(stream)
+        if not self.streams:
+            self._check_drained()
+
+    def _kick(self, stream: _Stream):
+        mode = stream.spec.arrival
+        if mode == "serial":
+            self._send_one(stream)
+        elif mode == "concurrent":
+            for _ in range(stream.spec.concurrency):
+                self._send_one(stream)
+        elif mode == "poisson":
+            self._schedule_arrival(stream)
+
+    def _send_one(self, stream: _Stream):
+        if not stream.queue:
+            self._check_drained()
+            return
+        wf = stream.queue.popleft()
+        stream.in_flight += 1
+        stream.sent += 1
+        self.sent += 1
+        self._by_ns[wf.namespace()] = stream
+        self.sim.after(self.grpc_latency, lambda: self.send_to(wf))
+
+    def _schedule_arrival(self, stream: _Stream):
+        if not stream.queue:
+            return
+        gap = self.rng.expovariate(stream.spec.rate)
+
+        def arrive():
+            for _ in range(stream.spec.burst):
+                if stream.queue:
+                    self._send_one(stream)
+            self._schedule_arrival(stream)
+
+        self.sim.after(gap, arrive)
+
+    # -- next-workflow trigger (completion routing) -------------------------
+    def workflow_done(self, wf: Workflow):
+        stream = self._by_ns.pop(wf.namespace(), None)
+        if stream is None:
+            self._check_drained()
+            return
+        stream.in_flight -= 1
+        if stream.spec.arrival in ("serial", "concurrent"):
+            self._send_one(stream)
+        else:
+            self._check_drained()
+
+    # legacy alias so the gateway is a drop-in for WorkflowInjector
+    request_next = workflow_done
+
+    # -- drain bookkeeping ---------------------------------------------------
+    def queued(self) -> int:
+        return sum(len(s.queue) for s in self.streams)
+
+    def pending(self) -> int:
+        return self.queued() + sum(s.in_flight for s in self.streams)
+
+    def _check_drained(self):
+        if self.on_drained and all(s.drained() for s in self.streams):
+            cb, self.on_drained = self.on_drained, None
+            cb()

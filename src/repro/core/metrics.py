@@ -9,6 +9,13 @@ Definitions follow the paper exactly:
                                sampled every 0.5 s (Figs 9-14),
   * order consistency        = pod start order is a topological
                                linearization of the DAG (Fig 6).
+
+Multi-tenant extensions (beyond-paper): every record carries its
+tenant; ``note_submitted`` timestamps gateway hand-off so queueing
+delay (submission -> namespace creation) is measurable; the sampler
+also breaks bound node usage down per tenant; ``tenant_summary``
+aggregates makespan / queueing delay / lifecycle / admission
+deferrals per tenant for the multi-tenant benchmarks.
 """
 from __future__ import annotations
 
@@ -25,6 +32,9 @@ from repro.core.sim import Sim
 class WorkflowRecord:
     name: str
     instance: int
+    tenant: str = "default"
+    submitted_at: float = -1.0
+    first_create: float = -1.0     # first task-pod creation (post-admission)
     ns_created: float = -1.0
     ns_deleted: float = -1.0
     starts: List[Tuple[float, str]] = field(default_factory=list)   # (t, task)
@@ -35,6 +45,15 @@ class WorkflowRecord:
     def lifecycle(self) -> float:
         return self.ns_deleted - self.ns_created
 
+    @property
+    def queue_delay(self) -> float:
+        """Gateway hand-off -> first task-pod creation. Namespace/PVC
+        setup is never arbiter-gated, so only the first *pod* creation
+        reflects admission wait under contention."""
+        if self.submitted_at < 0 or self.first_create < 0:
+            return float("nan")
+        return self.first_create - self.submitted_at
+
 
 class MetricsCollector:
     def __init__(self, sim: Sim, cluster: Cluster,
@@ -44,14 +63,29 @@ class MetricsCollector:
         self.p = params
         self.workflows: Dict[Tuple[str, int], WorkflowRecord] = {}
         self.samples: List[Tuple[float, int, int]] = []   # (t, cpu_m, mem_mi)
+        self.tenant_samples: List[Tuple[float, Dict[str, int]]] = []
+        self.admission_deferrals: Dict[str, int] = {}
         self._sampling = False
 
     # ---- lifecycle bookkeeping (engines call these) ---------------------
     def wf_record(self, wf: Workflow) -> WorkflowRecord:
         key = (wf.name, wf.instance)
         if key not in self.workflows:
-            self.workflows[key] = WorkflowRecord(wf.name, wf.instance)
+            self.workflows[key] = WorkflowRecord(wf.name, wf.instance,
+                                                 tenant=wf.tenant)
         return self.workflows[key]
+
+    def note_submitted(self, wf: Workflow):
+        self.wf_record(wf).submitted_at = self.sim.now()
+
+    def note_first_create(self, wf: Workflow):
+        rec = self.wf_record(wf)
+        if rec.first_create < 0:
+            rec.first_create = self.sim.now()
+
+    def note_admission_deferred(self, tenant: str):
+        self.admission_deferrals[tenant] = \
+            self.admission_deferrals.get(tenant, 0) + 1
 
     def note_ns_created(self, wf: Workflow):
         self.wf_record(wf).ns_created = self.sim.now()
@@ -74,6 +108,12 @@ class MetricsCollector:
         def sample():
             cpu, mem = self.cluster.used()
             self.samples.append((self.sim.now(), cpu, mem))
+            by_tenant: Dict[str, int] = {}
+            for pod in self.cluster.pods.values():
+                if pod._holding:
+                    t = pod.labels.get("tenant", "default")
+                    by_tenant[t] = by_tenant.get(t, 0) + pod.cpu_m
+            self.tenant_samples.append((self.sim.now(), by_tenant))
             if self._sampling:
                 self.sim.after(self.p.sample_period, sample, daemon=True)
 
@@ -143,3 +183,47 @@ class MetricsCollector:
             return 0.0, 0.0
         r = recs[0]
         return self.usage_rate_over(r.ns_created, r.ns_deleted)
+
+    # ---- per-tenant aggregates (multi-tenant control plane) ---------------
+    def tenant_records(self, tenant: str) -> List[WorkflowRecord]:
+        return [r for r in self.workflows.values() if r.tenant == tenant]
+
+    def tenant_makespan(self, tenant: str) -> float:
+        """First submission -> last namespace deletion for the tenant."""
+        recs = [r for r in self.tenant_records(tenant) if r.ns_deleted > 0]
+        if not recs:
+            return float("nan")
+        t0 = min(r.submitted_at if r.submitted_at >= 0 else r.ns_created
+                 for r in recs)
+        return max(r.ns_deleted for r in recs) - t0
+
+    def contended_cpu(self, tenants: List[str]) -> Dict[str, float]:
+        """Time-averaged bound CPU (milli-cores) per tenant over the
+        samples where ALL the given tenants hold resources — i.e. while
+        they actually contend. Empty dict if they never overlapped."""
+        window = [s for _, s in self.tenant_samples
+                  if all(s.get(t) for t in tenants)]
+        if not window:
+            return {}
+        return {t: sum(s[t] for s in window) / len(window) for t in tenants}
+
+    def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for tenant in sorted({r.tenant for r in self.workflows.values()}):
+            recs = self.tenant_records(tenant)
+            done = [r for r in recs if r.ns_deleted > 0]
+            delays = [r.queue_delay for r in done
+                      if r.queue_delay == r.queue_delay]      # drop NaN
+            lifecycles = [r.lifecycle for r in done]
+            out[tenant] = {
+                "workflows": float(len(recs)),
+                "completed": float(len(done)),
+                "makespan": self.tenant_makespan(tenant),
+                "avg_queue_delay": (sum(delays) / len(delays)
+                                    if delays else float("nan")),
+                "avg_lifecycle": (sum(lifecycles) / len(lifecycles)
+                                  if lifecycles else float("nan")),
+                "admission_deferrals":
+                    float(self.admission_deferrals.get(tenant, 0)),
+            }
+        return out

@@ -1,19 +1,41 @@
-"""Resource gathering & allocation module (§4.3).
+"""Resource gathering & allocation (§4.3) + multi-tenant admission.
 
-Reads NodeLister/PodLister from the informer cache (never the
-apiserver), computes cluster headroom as
+``ResourceGatherer`` is the paper's module: it reads NodeLister/
+PodLister from the informer cache (never the apiserver), computes
+cluster headroom as
 
     available = sum(Allocatable of ready nodes)        (master excluded —
               - sum(Requests of non-terminal pods)      it isn't in the
                                                         node list at all)
 
-and gates task-pod creation on fit. This is what lets KubeAdaptor admit
-exactly as many concurrent task pods as the cluster can hold instead of
-flooding the scheduler queue.
+and gates task-pod creation on fit, so KubeAdaptor admits exactly as
+many concurrent task pods as the cluster can hold instead of flooding
+the scheduler queue.
+
+``AdmissionArbiter`` promotes that stateless gate into the control
+plane's shared admission point. Concurrent workflows from many tenants
+contend for the same headroom, so the arbiter adds:
+
+* a pending queue of not-yet-admitted (workflow, task) requests,
+  re-evaluated whenever a pod frees resources — a starved workflow is
+  woken by *any* tenant's completions, not only its own;
+* a reservation ledger for pods granted but not yet visible in the
+  informer cache (the watch+informer latency window), preventing two
+  workflows from double-spending the same headroom;
+* pluggable admission policies (``ADMISSION_POLICIES``):
+
+    fifo        arrival order (paper-equivalent for one stream)
+    priority    higher tenant priority first, FIFO within a class
+    fair-share  weighted max-min: grant to the tenant with the lowest
+                in-use-cpu / weight ratio first
+
+Tenants are registered with ``set_tenant(name, priority=, weight=)``;
+unregistered tenants get priority 0 / weight 1.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import FAILED, PENDING, RUNNING, SUCCEEDED
 from repro.core.dag import Task
@@ -60,3 +82,245 @@ class ResourceGatherer:
                 ac -= cpu
                 am -= mem
         return out
+
+
+# ---------------------------------------------------------------------------
+# admission requests + tenant accounting
+# ---------------------------------------------------------------------------
+@dataclass
+class AdmissionRequest:
+    namespace: str
+    tenant: str
+    task: Task
+    create: Callable[[Task], None]
+    seq: int
+    deferred: bool = False
+
+    def key(self) -> Tuple[str, str]:
+        return (self.namespace, self.task.id)
+
+
+@dataclass
+class TenantShare:
+    priority: int = 0
+    weight: float = 1.0
+    granted: int = 0               # pods admitted over the run
+    deferred: int = 0              # requests that had to wait at least once
+
+
+# ---------------------------------------------------------------------------
+# policies: given the pending set, pick the next request to consider
+# ---------------------------------------------------------------------------
+class FifoPolicy:
+    name = "fifo"
+
+    def order(self, pending: List[AdmissionRequest],
+              arbiter: "AdmissionArbiter") -> List[AdmissionRequest]:
+        return sorted(pending, key=lambda r: r.seq)
+
+    def may_backfill(self, blocked: AdmissionRequest,
+                     candidate: AdmissionRequest,
+                     arbiter: "AdmissionArbiter") -> bool:
+        # FIFO is work-conserving: smaller later tasks may slip past a
+        # blocked one (the paper gatherer's greedy behaviour)
+        return True
+
+
+class PriorityPolicy:
+    name = "priority"
+
+    def order(self, pending: List[AdmissionRequest],
+              arbiter: "AdmissionArbiter") -> List[AdmissionRequest]:
+        def rank(r: AdmissionRequest):
+            return (-arbiter.tenant(r.tenant).priority, r.seq)
+        return sorted(pending, key=rank)
+
+    def may_backfill(self, blocked: AdmissionRequest,
+                     candidate: AdmissionRequest,
+                     arbiter: "AdmissionArbiter") -> bool:
+        # never jump a *higher*-priority blocked request — a stream of
+        # small low-priority tasks must not starve a big high-priority
+        # one; backfill within the same class is fine (FIFO there)
+        return (arbiter.tenant(candidate.tenant).priority
+                >= arbiter.tenant(blocked.tenant).priority)
+
+
+class FairSharePolicy:
+    """Weighted max-min: most-underserved tenant (in-use cpu / weight)
+    goes first; FIFO inside a tenant."""
+
+    name = "fair-share"
+
+    def order(self, pending: List[AdmissionRequest],
+              arbiter: "AdmissionArbiter") -> List[AdmissionRequest]:
+        usage = arbiter.tenant_usage_cpu()
+
+        def rank(r: AdmissionRequest):
+            share = arbiter.tenant(r.tenant)
+            return (usage.get(r.tenant, 0) / max(share.weight, 1e-9), r.seq)
+        return sorted(pending, key=rank)
+
+    def may_backfill(self, blocked: AdmissionRequest,
+                     candidate: AdmissionRequest,
+                     arbiter: "AdmissionArbiter") -> bool:
+        return True
+
+    # ranking depends on per-tenant usage, which every grant changes —
+    # the arbiter must re-order after each grant (fifo/priority don't)
+    dynamic_order = True
+
+
+ADMISSION_POLICIES = {
+    "fifo": FifoPolicy,
+    "priority": PriorityPolicy,
+    "fair-share": FairSharePolicy,
+}
+
+
+class AdmissionArbiter(ResourceGatherer):
+    """Stateful, policy-driven admission shared by all live workflows."""
+
+    def __init__(self, informers: InformerSet, policy: str = "fifo",
+                 on_defer: Optional[Callable[[str], None]] = None):
+        super().__init__(informers)
+        if isinstance(policy, str):
+            policy = ADMISSION_POLICIES[policy]()
+        self.policy = policy
+        self.on_defer = on_defer
+        self.pending: Dict[Tuple[str, str], AdmissionRequest] = {}
+        # (ns, pod name) -> (tenant, cpu, mem, reserved_at)
+        self.reserved: Dict[Tuple[str, str], Tuple[str, int, int, float]] = {}
+        self.tenants: Dict[str, TenantShare] = {}
+        self.admitted = 0
+        self.deferrals = 0
+        self._seq = 0
+
+    # -- tenant registry ----------------------------------------------------
+    def set_tenant(self, name: str, priority: int = 0, weight: float = 1.0):
+        self.tenants[name] = TenantShare(priority=priority, weight=weight)
+
+    def tenant(self, name: str) -> TenantShare:
+        if name not in self.tenants:
+            self.tenants[name] = TenantShare()
+        return self.tenants[name]
+
+    # -- accounting ---------------------------------------------------------
+    def _sync_reservations(self):
+        """Drop reservations for pods the informer now sees as
+        non-terminal — from that point ``requested()`` accounts for
+        them. (A FAILED/SUCCEEDED cache entry can be a *previous*
+        incarnation of a retried pod name, so it doesn't count.)"""
+        cache = self.inf.pods.cache
+        for key in [k for k in self.reserved
+                    if k in cache and cache[k].phase in (PENDING, RUNNING)]:
+            del self.reserved[key]
+
+    def reserve(self, namespace: str, name: str, tenant: str,
+                cpu: int, mem: int):
+        """Charge headroom for a pod whose creation is in flight but not
+        yet visible in the informer cache. Engines call this for EVERY
+        pod they create (granted, retried, or speculative twin), closing
+        the watch+informer latency double-spend window. The timestamp
+        lets ``pod_removed`` tell which incarnation of a reused pod name
+        a reservation belongs to."""
+        now = self.inf.pods.sim.now()
+        self.reserved.setdefault((namespace, name), (tenant, cpu, mem, now))
+
+    def available(self) -> Tuple[int, int]:
+        self._sync_reservations()
+        ac, am = super().available()
+        for _, cpu, mem, _t in self.reserved.values():
+            ac -= cpu
+            am -= mem
+        return ac, am
+
+    def tenant_usage_cpu(self) -> Dict[str, int]:
+        """CPU currently held per tenant: informer-visible non-terminal
+        pods plus not-yet-visible reservations."""
+        self._sync_reservations()
+        usage: Dict[str, int] = {}
+        for pod in self.inf.pods.lister():
+            if pod.phase in (PENDING, RUNNING):
+                t = pod.labels.get("tenant", "default")
+                usage[t] = usage.get(t, 0) + pod.cpu_m
+        for tenant, cpu, _mem, _t in self.reserved.values():
+            usage[tenant] = usage.get(tenant, 0) + cpu
+        return usage
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, namespace: str, tenant: str, tasks: List[Task],
+               create: Callable[[Task], None]):
+        """Queue admission requests (idempotent per (namespace, task))
+        and immediately evaluate the pending set."""
+        for task in tasks:
+            req = AdmissionRequest(namespace, tenant, task, create,
+                                   seq=self._seq)
+            self._seq += 1
+            self.pending.setdefault(req.key(), req)
+        self.evaluate()
+
+    def evaluate(self):
+        """Grant as many pending requests as headroom (and the policy's
+        backfill rule) allows. Headroom is decremented locally per grant
+        (one cluster scan per evaluate, not per grant); fifo/priority
+        orderings are grant-invariant so they grant in a single sorted
+        pass, while fair-share re-ranks after every grant because its
+        usage/weight key shifts as grants accrue. The grant callback
+        performs the actual pod creation and charges the reservation
+        (via ``reserve`` inside the engine's create path); it returns
+        False for a stale grant the engine declined, which then counts
+        toward nothing."""
+        ac, am = self.available()
+        dynamic = getattr(self.policy, "dynamic_order", False)
+        progress = True
+        while progress and self.pending:
+            progress = False
+            blocked: List[AdmissionRequest] = []
+            for req in self.policy.order(list(self.pending.values()), self):
+                cpu, mem = req.task.resource_request()
+                if (cpu <= ac and mem <= am
+                        and all(self.policy.may_backfill(b, req, self)
+                                for b in blocked)):
+                    del self.pending[req.key()]
+                    if req.create(req.task) is not False:
+                        self.admitted += 1
+                        self.tenant(req.tenant).granted += 1
+                        ac -= cpu
+                        am -= mem
+                    progress = True
+                    if dynamic:
+                        break          # re-rank with the new usage
+                else:
+                    blocked.append(req)
+            if not dynamic:
+                break                  # one sorted pass granted all that fit
+        # whatever is still pending had to wait at least once
+        for req in self.pending.values():
+            if not req.deferred:
+                req.deferred = True
+                self.deferrals += 1
+                self.tenant(req.tenant).deferred += 1
+                if self.on_defer:
+                    self.on_defer(req.tenant)
+
+    def pod_removed(self, pod):
+        """A pod freed resources: drop its reservation (if still held)
+        and wake pending requests of every tenant.
+
+        A retried pod can be re-created under the same name *before*
+        the old incarnation's DELETED event reaches the informer; the
+        reservation timestamp tells the incarnations apart — a
+        reservation made after the removed pod was created belongs to
+        the replacement and must survive."""
+        key = (pod.namespace, pod.name)
+        held = self.reserved.get(key)
+        if held is not None and held[3] <= pod.created:
+            del self.reserved[key]
+        if self.pending:
+            self.evaluate()
+
+    def forget_namespace(self, namespace: str):
+        for key in [k for k in self.pending if k[0] == namespace]:
+            del self.pending[key]
+        for key in [k for k in self.reserved if k[0] == namespace]:
+            del self.reserved[key]

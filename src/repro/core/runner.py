@@ -1,13 +1,32 @@
-"""One-call experiment runner: engine x workflow x repeats -> metrics.
+"""Experiment harness: the ControlPlane builder + one-call runner.
 
-This is the harness every benchmark and test uses; it wires a fresh
-Sim/Cluster/Informer/Event/Volume/Metrics stack, runs ``repeats``
-back-to-back instances (the paper runs 100), and returns the collector.
+Architecture (multi-tenant control plane):
+
+    ┌────────────────────────── ControlPlane ─────────────────────────┐
+    │  Sim ── Cluster ── VolumeManager ── MetricsCollector            │
+    │                                                                 │
+    │  WorkflowGateway ──submit──▶ engine ──admission──▶ Arbiter      │
+    │   streams:                   kubeadaptor | batchjob |           │
+    │     tenant, arrival          argo | direct                      │
+    │     (serial/concurrent/      (baselines skip the informer       │
+    │      poisson), priority,      stack and the arbiter)            │
+    │      fair-share weight                                          │
+    └─────────────────────────────────────────────────────────────────┘
+
+``ControlPlane`` composes sim/cluster/informers/events/volumes/metrics/
+engine/gateway for any engine and exposes the tenancy knobs: call
+``add_stream`` once per tenant workload (arrival mode, concurrency,
+Poisson rate, priority, fair-share weight), pick an admission policy
+(``fifo`` / ``priority`` / ``fair-share``), then ``run``.
+
+``run_experiment`` keeps the original one-workflow signature — it is a
+ControlPlane with a single default-tenant serial stream, which is
+exactly the paper's serialized injector experiment.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Type
+from typing import Optional
 
 from repro.core import calibration as cal
 from repro.core.baselines import ArgoLikeEngine, BatchJobEngine, DirectSubmitEngine
@@ -16,8 +35,10 @@ from repro.core.dag import Workflow
 from repro.core.engine import KubeAdaptorEngine
 from repro.core.events import EventRegistry
 from repro.core.informer import InformerSet
-from repro.core.injector import WorkflowInjector
+from repro.core.injector import StreamSpec, WorkflowGateway
 from repro.core.metrics import MetricsCollector
+from repro.core.resources import ADMISSION_POLICIES, AdmissionArbiter
+from repro.core.schedulers import SCHEDULERS
 from repro.core.sim import Sim
 from repro.core.volumes import VolumeManager
 
@@ -36,6 +57,88 @@ class RunResult:
     sim: Sim
     engine: object
     api_calls: int
+    gateway: Optional[WorkflowGateway] = None
+    arbiter: Optional[AdmissionArbiter] = None
+
+
+class ControlPlane:
+    """Builder/composer for one experiment stack of any engine."""
+
+    def __init__(self, engine_name: str = "kubeadaptor",
+                 params: cal.ClusterParams = cal.DEFAULT_PARAMS,
+                 cluster_cfg: cal.PaperCluster = cal.DEFAULT_CLUSTER,
+                 payload_mode: str = "virtual", seed: int = 0,
+                 speculative: bool = False,
+                 scheduler: str = "topological",
+                 admission_policy: str = "fifo",
+                 sample_resources: bool = True):
+        if engine_name not in ENGINES:
+            raise ValueError(f"unknown engine {engine_name!r}; "
+                             f"expected one of {sorted(ENGINES)}")
+        if admission_policy not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {admission_policy!r}; "
+                             f"expected one of {sorted(ADMISSION_POLICIES)}")
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r}; "
+                             f"expected one of {sorted(SCHEDULERS)}")
+        self.engine_name = engine_name
+        self.params = params
+        self.sample_resources = sample_resources
+        self.sim = Sim()
+        self.cluster = Cluster(self.sim, params, cluster_cfg,
+                               payload_mode=payload_mode, seed=seed)
+        self.volumes = VolumeManager(self.sim, self.cluster, params)
+        self.metrics = MetricsCollector(self.sim, self.cluster, params)
+        self.arbiter: Optional[AdmissionArbiter] = None
+
+        if engine_name == "kubeadaptor":
+            self.informers = InformerSet(self.sim, self.cluster, params)
+            self.events = EventRegistry(self.sim)
+            self.arbiter = AdmissionArbiter(
+                self.informers, policy=admission_policy,
+                on_defer=self.metrics.note_admission_deferred)
+            self.engine = KubeAdaptorEngine(
+                self.sim, self.cluster, self.informers, self.events,
+                self.volumes, self.metrics, params,
+                scheduler_cls=SCHEDULERS[scheduler],
+                speculative=speculative, arbiter=self.arbiter)
+        else:
+            self.informers = None
+            self.events = None
+            self.engine = ENGINES[engine_name](
+                self.sim, self.cluster, self.volumes, self.metrics, params)
+
+        self.gateway = WorkflowGateway(self.sim, self.engine.submit, seed=seed)
+        self.engine.on_workflow_done = self.gateway.workflow_done
+
+    # -- tenancy knobs -------------------------------------------------------
+    def add_stream(self, workflow: Workflow, repeats: int = 1,
+                   tenant: str = "default", arrival: str = "serial",
+                   concurrency: int = 1, rate: float = 1.0, burst: int = 1,
+                   priority: int = 0, weight: float = 1.0) -> StreamSpec:
+        spec = StreamSpec(workflow=workflow, repeats=repeats, tenant=tenant,
+                          arrival=arrival, concurrency=concurrency, rate=rate,
+                          burst=burst, priority=priority, weight=weight)
+        if self.arbiter is not None:
+            self.arbiter.set_tenant(tenant, priority=priority, weight=weight)
+        return self.gateway.add_stream(spec)
+
+    # -- execution -----------------------------------------------------------
+    def run(self, horizon_s: float = 500_000.0) -> RunResult:
+        if self.sample_resources:
+            self.metrics.start_sampling()
+            self.gateway.on_drained = self.metrics.stop_sampling
+        self.gateway.start()
+        self.sim.run(until=horizon_s)
+        if not self.sim.idle() and self.gateway.pending():
+            raise RuntimeError(
+                f"{self.engine_name} did not finish within horizon "
+                f"({self.gateway.queued()} workflows queued, "
+                f"{self.gateway.pending() - self.gateway.queued()} in flight)")
+        return RunResult(metrics=self.metrics, cluster=self.cluster,
+                         sim=self.sim, engine=self.engine,
+                         api_calls=self.cluster.api_calls,
+                         gateway=self.gateway, arbiter=self.arbiter)
 
 
 def run_experiment(engine_name: str, workflow: Workflow, repeats: int = 1,
@@ -45,37 +148,10 @@ def run_experiment(engine_name: str, workflow: Workflow, repeats: int = 1,
                    speculative: bool = False,
                    sample_resources: bool = True,
                    horizon_s: float = 500_000.0) -> RunResult:
-    sim = Sim()
-    cluster = Cluster(sim, params, cluster_cfg, payload_mode=payload_mode,
-                      seed=seed)
-    volumes = VolumeManager(sim, cluster, params)
-    metrics = MetricsCollector(sim, cluster, params)
-
-    if engine_name == "kubeadaptor":
-        informers = InformerSet(sim, cluster, params)
-        events = EventRegistry(sim)
-        engine = KubeAdaptorEngine(sim, cluster, informers, events, volumes,
-                                   metrics, params, speculative=speculative)
-        injector = WorkflowInjector(sim, engine.submit)
-        engine.on_workflow_done = injector.request_next
-        injector.load([workflow.with_instance(i) for i in range(repeats)])
-        if sample_resources:
-            metrics.start_sampling()
-        injector.start()
-        injector.on_drained = metrics.stop_sampling
-    else:
-        cls = ENGINES[engine_name]
-        engine = cls(sim, cluster, volumes, metrics, params)
-        injector = WorkflowInjector(sim, engine.submit)
-        engine.on_workflow_done = injector.request_next
-        injector.load([workflow.with_instance(i) for i in range(repeats)])
-        if sample_resources:
-            metrics.start_sampling()
-        injector.start()
-        injector.on_drained = metrics.stop_sampling
-
-    sim.run(until=horizon_s)
-    if not sim.idle() and injector.queue:
-        raise RuntimeError(f"{engine_name} did not finish within horizon")
-    return RunResult(metrics=metrics, cluster=cluster, sim=sim, engine=engine,
-                     api_calls=cluster.api_calls)
+    """The paper's experiment: serial injection of ``repeats`` instances."""
+    plane = ControlPlane(engine_name, params=params, cluster_cfg=cluster_cfg,
+                         payload_mode=payload_mode, seed=seed,
+                         speculative=speculative,
+                         sample_resources=sample_resources)
+    plane.gateway.load([workflow.with_instance(i) for i in range(repeats)])
+    return plane.run(horizon_s=horizon_s)

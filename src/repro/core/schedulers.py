@@ -5,6 +5,11 @@ is to make the level-2 (cluster) execution follow whatever order the
 level-1 algorithm emits. We ship the paper's algorithm plus a
 longest-path-first variant to demonstrate the docking framework is
 algorithm-agnostic (the engine consumes any ``order_ready``).
+
+``SCHEDULERS`` is the registry the ControlPlane builder resolves its
+``scheduler=`` knob against (core/runner.py); register new level-1
+algorithms here to make them selectable by name in experiments and
+benchmarks.
 """
 from __future__ import annotations
 
