@@ -1,0 +1,191 @@
+"""Scale-out stress tier: 1000 workflows / 100 nodes through the
+multi-tenant ControlPlane (ROADMAP's "1000-workflow stress scenario").
+
+Eight streams (two tenants per paper topology) drive the full
+KubeAdaptor stack — gateway, admission arbiter, informers, disordered
+scheduler — on a synthetic ``PaperCluster`` scaled to ``--nodes``.
+Each topology contributes a closed-loop "prod" tenant (concurrent
+arrivals, priority 10, fair-share weight 3) and an open-loop "batch"
+tenant (Poisson surge, the whole queue arriving in the first ~minute),
+so the admission backlog grows to thousands of pending requests while
+interactive load keeps flowing — the arrival-trace regime the ROADMAP
+targets. Per admission policy the run records real wall-clock, sim
+events/sec, peak pending depths (admission queue + unbound pods),
+per-tenant makespan, and peak RSS, then writes everything to
+``BENCH_scale.json`` (schema: benchmarks/README.md).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_scale \
+        [--workflows 1000] [--nodes 100] [--seed 42] \
+        [--policies fifo,priority,fair-share] [--out BENCH_scale.json] \
+        [--budget-s 0]
+
+``--budget-s`` exits non-zero when total wall time exceeds the budget —
+the CI smoke job uses it to fail the build on event-core regressions.
+The module's ``run()`` (for ``benchmarks.run``) executes a reduced
+50-workflow/20-node smoke variant of the same scenario.
+
+The script runs unmodified against the pre-optimization core (counters
+it introduced are read via getattr) so speedups can be measured by
+checking out two revisions and comparing ``wall_s``.
+"""
+import argparse
+import inspect
+import json
+import platform
+import resource
+import sys
+import time
+
+from benchmarks.common import row
+from repro.configs.workflows import get_workflow_spec
+from repro.core import calibration as cal
+from repro.core.dag import make_workflow
+from repro.core.runner import ControlPlane
+
+TOPOLOGIES = ("montage", "epigenomics", "cybershake", "ligo")
+POLICIES = ("fifo", "priority", "fair-share")
+SCHEMA = "bench_scale/v1"
+
+
+def _plane_kwargs():
+    """Knobs that only the optimized core understands."""
+    params = inspect.signature(ControlPlane.__init__).parameters
+    kw = {}
+    if "sample_mode" in params:
+        kw["sample_mode"] = "streaming"
+    if "retain_pod_log" in params:
+        kw["retain_pod_log"] = False
+    return kw
+
+
+def build_plane(policy, n_workflows, n_nodes, seed):
+    plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                         cluster_cfg=cal.PaperCluster(n_nodes=n_nodes),
+                         seed=seed, **_plane_kwargs())
+    n_streams = 2 * len(TOPOLOGIES)
+    per, rem = divmod(n_workflows, n_streams)
+    # enough closed-loop concurrency to keep ~666 pod slots/100 nodes busy
+    conc = max(2, (n_nodes * 7) // (n_streams * 4))
+    i = 0
+    for topo in TOPOLOGIES:
+        wf = make_workflow(topo, get_workflow_spec(topo))
+        for klass, prio, weight in (("prod", 10, 3.0), ("batch", 0, 1.0)):
+            repeats = per + (1 if i < rem else 0)
+            if klass == "prod":     # closed-loop interactive tenant
+                plane.add_stream(wf, repeats=repeats,
+                                 tenant=f"{topo}-{klass}",
+                                 arrival="concurrent", concurrency=conc,
+                                 priority=prio, weight=weight)
+            else:                   # open-loop surge: deep pending queue
+                plane.add_stream(wf, repeats=repeats,
+                                 tenant=f"{topo}-{klass}",
+                                 arrival="poisson", rate=0.5, burst=2,
+                                 priority=prio, weight=weight)
+            i += 1
+    return plane
+
+
+def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0):
+    plane = build_plane(policy, n_workflows, n_nodes, seed)
+    t0 = time.perf_counter()
+    res = plane.run(horizon_s=horizon_s)
+    wall = time.perf_counter() - t0
+    m = res.metrics
+    completed = sum(1 for r in m.workflows.values() if r.ns_deleted > 0)
+    events = getattr(res.sim, "events_processed", None)
+    rec = {
+        "policy": policy,
+        "wall_s": round(wall, 3),
+        "sim_makespan_s": round(res.sim.t, 2),
+        "events": events,
+        "events_per_sec": (round(events / wall) if events else None),
+        "peak_pending_admission": getattr(res.arbiter, "max_pending", None),
+        "peak_pending_pods": getattr(res.cluster, "max_pending_pods", None),
+        "completed_workflows": completed,
+        "api_calls": res.cluster.api_calls,
+        "admitted": res.arbiter.admitted,
+        "deferrals": res.arbiter.deferrals,
+        "peak_rss_mib": round(
+            resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024, 1),
+        "tenant_makespan_s": {
+            t: round(s["makespan"], 2)
+            for t, s in m.tenant_summary().items()},
+    }
+    cpu_stat = getattr(m, "cpu_stat", None)
+    if cpu_stat is not None and cpu_stat.count:
+        cpu_a, _ = res.cluster.allocatable()
+        rec["cpu_usage"] = {"samples": cpu_stat.count,
+                            "mean_rate": round(cpu_stat.mean / cpu_a, 4),
+                            "peak_rate": round(cpu_stat.max / cpu_a, 4),
+                            "p95_rate": round(
+                                cpu_stat.percentile(95) / cpu_a, 4)}
+    exec_stat = getattr(res.cluster, "exec_stat", None)
+    if exec_stat is not None and exec_stat.count:
+        rec["pod_exec_s"] = {"count": exec_stat.count,
+                             "mean": round(exec_stat.mean, 2),
+                             "max": round(exec_stat.max, 2),
+                             "p95": round(exec_stat.percentile(95), 2)}
+    return rec
+
+
+def run_scenario(n_workflows, n_nodes, seed, policies):
+    runs = [run_policy(p, n_workflows, n_nodes, seed) for p in policies]
+    return {
+        "schema": SCHEMA,
+        "scenario": {"workflows": n_workflows, "nodes": n_nodes,
+                     "node_cpu_m": cal.PaperCluster.node_cpu_m,
+                     "node_mem_mi": cal.PaperCluster.node_mem_mi,
+                     "seed": seed, "topologies": list(TOPOLOGIES),
+                     "streams": 2 * len(TOPOLOGIES)},
+        "host": {"python": platform.python_version(),
+                 "platform": platform.platform()},
+        "runs": runs,
+        "total_wall_s": round(sum(r["wall_s"] for r in runs), 3),
+    }
+
+
+def run():
+    """benchmarks.run entry: reduced smoke variant of the stress tier."""
+    report = run_scenario(50, 20, seed=42, policies=("fifo", "fair-share"))
+    rows = []
+    for r in report["runs"]:
+        rows.append(row(
+            f"scale_smoke_50wf_20n_{r['policy']}", r["wall_s"] * 1e6,
+            f"makespan_s={r['sim_makespan_s']};"
+            f"events_per_sec={r['events_per_sec']};"
+            f"peak_pending={r['peak_pending_admission']};"
+            f"completed={r['completed_workflows']}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--workflows", type=int, default=1000)
+    ap.add_argument("--nodes", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--policies", default=",".join(POLICIES))
+    ap.add_argument("--out", default="BENCH_scale.json")
+    ap.add_argument("--budget-s", type=float, default=0.0,
+                    help="fail (exit 2) if total wall time exceeds this")
+    args = ap.parse_args()
+
+    policies = [p for p in args.policies.split(",") if p]
+    report = run_scenario(args.workflows, args.nodes, args.seed, policies)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    for r in report["runs"]:
+        print(f"{r['policy']:>11}: wall={r['wall_s']:.1f}s "
+              f"makespan={r['sim_makespan_s']:.0f}s "
+              f"events/s={r['events_per_sec']} "
+              f"completed={r['completed_workflows']}", flush=True)
+    print(f"total wall: {report['total_wall_s']:.1f}s -> {args.out}")
+    if args.budget_s and report["total_wall_s"] > args.budget_s:
+        print(f"BUDGET EXCEEDED: {report['total_wall_s']:.1f}s "
+              f"> {args.budget_s:.1f}s", file=sys.stderr)
+        raise SystemExit(2)
+
+
+if __name__ == "__main__":
+    main()

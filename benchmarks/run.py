@@ -28,6 +28,7 @@ def main() -> None:
         ("engine_micro", "bench_engine_micro"),
         ("schedulers", "bench_schedulers"),
         ("multi_tenant", "bench_multi_tenant"),
+        ("scale", "bench_scale"),
         ("kernels", "bench_kernels"),
         ("roofline", "roofline"),
     ]

@@ -14,23 +14,50 @@ Faithful to the properties the paper builds on:
 
 Payloads: virtual (declared seconds) or real callables whose wall time
 feeds the virtual clock (see core/sim.py).
+
+Scale-out notes (1000 workflows / 100 nodes — see ISSUE 2):
+  * a dedicated pending-pod index replaces the per-cycle scan of every
+    pod object still alive in the apiserver, and one reusable node
+    array (reset to the canonical order each cycle, like the fresh
+    ``list(...)`` it replaces) takes the per-pod allocation out of the
+    scatter loop;
+  * the scatter shuffle burns the exact word stream of the seeded RNG
+    via ``ExactShuffler`` — same binding sequence bit-for-bit (pinned
+    by tests/test_scale_core.py) — and skips the first-fit scan (never
+    the draws) for pods that provably fit no node;
+  * watch fan-out batches same-instant events per kind into one sim
+    event, with one object snapshot per notification, delivered at the
+    same virtual times as the per-event path it replaces.
 """
 from __future__ import annotations
 
-import copy
 import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core import calibration as cal
+from repro.core.shuffle import ExactShuffler
 from repro.core.sim import Sim, measure_wall
+from repro.core.stats import StreamingStat
 
 PENDING, RUNNING, SUCCEEDED, FAILED = "Pending", "Running", "Succeeded", "Failed"
 ADDED, MODIFIED, DELETED = "ADDED", "MODIFIED", "DELETED"
 
 
+class _FastCopy:
+    """Snapshot without ``copy.copy``'s reduce/dispatch machinery; the
+    watch path clones one object per notification."""
+
+    def __copy__(self):
+        new = object.__new__(type(self))
+        new.__dict__.update(self.__dict__)
+        return new
+
+    clone = __copy__
+
+
 @dataclass
-class NodeObj:
+class NodeObj(_FastCopy):
     name: str
     cpu_alloc: int
     mem_alloc: int
@@ -45,7 +72,7 @@ class NodeObj:
 
 
 @dataclass
-class PodObj:
+class PodObj(_FastCopy):
     name: str
     namespace: str
     task_id: str
@@ -68,14 +95,14 @@ class PodObj:
 
 
 @dataclass
-class NamespaceObj:
+class NamespaceObj(_FastCopy):
     name: str
     created: float = 0.0
     deleted: float = -1.0
 
 
 @dataclass
-class PVCObj:
+class PVCObj(_FastCopy):
     name: str
     namespace: str
     bound: bool = False
@@ -92,32 +119,84 @@ class WatchEvent:
 class Cluster:
     def __init__(self, sim: Sim, params: cal.ClusterParams = cal.DEFAULT_PARAMS,
                  cluster_cfg: cal.PaperCluster = cal.DEFAULT_CLUSTER,
-                 payload_mode: str = "virtual", seed: int = 0):
+                 payload_mode: str = "virtual", seed: int = 0,
+                 retain_pod_log: bool = True):
         self.sim = sim
         self.p = params
         self.payload_mode = payload_mode
         self.rng = random.Random(seed)
+        # sole consumer of self.rng (see shuffle.py buffering contract)
+        self._shuffler = ExactShuffler(self.rng)
         self.nodes: Dict[str, NodeObj] = {
             name: NodeObj(name, cpu, mem) for name, cpu, mem in cluster_cfg.nodes()}
         self.pods: Dict[Tuple[str, str], PodObj] = {}
         self.namespaces: Dict[str, NamespaceObj] = {}
         self.pvcs: Dict[Tuple[str, str], PVCObj] = {}
         self._watchers: Dict[str, List[Callable[[WatchEvent], None]]] = {}
+        self._batch_watchers: Dict[str, List[Callable]] = {}
+        # kind -> (delivery time, events) for the open same-instant batch
+        self._watch_buf: Dict[str, Tuple[float, List[WatchEvent]]] = {}
         self._sched_scheduled = False
         self.api_calls = 0                   # apiserver pressure counter
+        self.retain_pod_log = retain_pod_log
         self.pod_log: List[PodObj] = []      # every pod ever (metrics)
+        self.exec_stat = StreamingStat()     # pod create->delete (Succeeded)
+        # scheduler indexes: unbound Pending pods in creation order (the
+        # same visit order as the old full-pod scan), reusable node array
+        self._pending_pods: Dict[Tuple[str, str], PodObj] = {}
+        self._pods_by_ns: Dict[str, Dict[Tuple[str, str], PodObj]] = {}
+        self._node_seq: List[NodeObj] = list(self.nodes.values())
+        self._node_perm = self._shuffler.make_perm(len(self._node_seq))
+        if self._shuffler.has_native_cycle:
+            import ctypes
+            n = len(self._node_seq)
+            self._c_free_cpu = (ctypes.c_int32 * n)()
+            self._c_free_mem = (ctypes.c_int32 * n)()
+            self._c_state = (ctypes.c_long * 2)()
+            self._c_pod_cap = 0
+            self._c_pod_cpu = self._c_pod_mem = self._c_bind = None
+        self.max_pending_pods = 0            # peak unbound-pod queue depth
+        self.sched_cycles = 0
+        # bound (resource-holding) cpu per tenant label, kept current at
+        # bind/release so samplers never scan the pod table
+        self.tenant_holding_cpu: Dict[str, int] = {}
 
     # ---- watch ---------------------------------------------------------
     def watch(self, kind: str, cb: Callable[[WatchEvent], None]):
         self._watchers.setdefault(kind, []).append(cb)
 
+    def watch_batch(self, kind: str, cb: Callable[[List[WatchEvent]], None]):
+        """Batched stream: one callback per delivery instant with every
+        event of ``kind`` that became due at that instant (informers use
+        this; per-event ``watch`` remains for simple consumers)."""
+        self._batch_watchers.setdefault(kind, []).append(cb)
+
     def _notify(self, kind: str, type_: str, obj: Any):
+        if kind not in self._watchers and kind not in self._batch_watchers:
+            return
         # snapshot the object version at event time (like a real watch
-        # stream's resourceVersion) — consumers must not see later state
-        snap = copy.copy(obj)
-        for cb in self._watchers.get(kind, []):
-            self.sim.after(self.p.watch_latency,
-                           (lambda c=cb, e=WatchEvent(kind, type_, snap): c(e)))
+        # stream's resourceVersion) — consumers must not see later state;
+        # one snapshot per notification, shared by all watchers
+        ev = WatchEvent(kind, type_, obj.clone())
+        due = self.sim.t + self.p.watch_latency
+        buf = self._watch_buf.get(kind)
+        if buf is not None and buf[0] == due:
+            buf[1].append(ev)
+            return
+        batch = [ev]
+        self._watch_buf[kind] = (due, batch)
+        self.sim.at(due, self._flush_watch, note=f"watch:{kind}",
+                    args=(kind, due, batch))
+
+    def _flush_watch(self, kind: str, due: float, batch: List[WatchEvent]):
+        buf = self._watch_buf.get(kind)
+        if buf is not None and buf[0] == due:
+            del self._watch_buf[kind]
+        for cb in self._batch_watchers.get(kind, ()):
+            cb(batch)
+        for cb in self._watchers.get(kind, ()):
+            for ev in batch:
+                cb(ev)
 
     # ---- namespaces / PVC ----------------------------------------------
     def create_namespace(self, name: str, cb: Optional[Callable] = None):
@@ -141,8 +220,8 @@ class Cluster:
             if ns is not None:
                 ns.deleted = self.sim.now()
                 # cascade: pods + pvcs in the namespace
-                for key in [k for k in self.pods if k[0] == name]:
-                    self._remove_pod(self.pods[key])
+                for pod in list(self._pods_by_ns.get(name, {}).values()):
+                    self._remove_pod(pod)
                 for key in [k for k in self.pvcs if k[0] == name]:
                     del self.pvcs[key]
                 self._notify("namespace", DELETED, ns)
@@ -189,7 +268,12 @@ class Cluster:
             pod.created = self.sim.now()
             pod.phase = PENDING
             self.pods[key] = pod
-            self.pod_log.append(pod)
+            self._pods_by_ns.setdefault(pod.namespace, {})[key] = pod
+            self._pending_pods[key] = pod
+            if len(self._pending_pods) > self.max_pending_pods:
+                self.max_pending_pods = len(self._pending_pods)
+            if self.retain_pod_log:
+                self.pod_log.append(pod)
             self._notify("pod", ADDED, pod)
             self._kick_scheduler()
             if cb:
@@ -219,6 +303,16 @@ class Cluster:
         self._release(pod)
         pod.deleted = self.sim.now()
         del self.pods[key]
+        self._pending_pods.pop(key, None)
+        ns_map = self._pods_by_ns.get(pod.namespace)
+        if ns_map is not None:
+            ns_map.pop(key, None)
+            if not ns_map:
+                del self._pods_by_ns[pod.namespace]
+        if pod.phase == SUCCEEDED and pod.labels.get("virtual") != "1":
+            # paper metric: task-pod execution time, virtual entry/exit
+            # pods excluded (matches MetricsCollector.pod_exec_times)
+            self.exec_stat.add(pod.deleted - pod.created)
         self._notify("pod", DELETED, pod)
 
     def _release(self, pod: PodObj):
@@ -227,30 +321,92 @@ class Cluster:
             n.cpu_used -= pod.cpu_m
             n.mem_used -= pod.mem_mi
             pod._holding = False
+            self.tenant_holding_cpu[pod.labels.get("tenant", "default")] -= \
+                pod.cpu_m
 
     # ---- the disordered scheduler ---------------------------------------
     def _kick_scheduler(self):
         if not self._sched_scheduled:
             self._sched_scheduled = True
-            self.sim.after(self.p.sched_cycle, self._schedule_cycle)
+            self.sim.after(self.p.sched_cycle, self._schedule_cycle,
+                           note="sched-cycle")
 
     def _schedule_cycle(self):
         self._sched_scheduled = False
-        pending = [p for p in self.pods.values()
-                   if p.phase == PENDING and p.scheduled < 0]   # unbound only
-        if not pending:
+        if not self._pending_pods:
             return
-        self.rng.shuffle(pending)                   # disorderly
-        node_list = list(self.nodes.values())
+        self.sched_cycles += 1
+        pending = list(self._pending_pods.values())
+        shuffler = self._shuffler
+        shuffler.shuffle(pending)                   # disorderly
+        node_seq = self._node_seq
+        n_nodes = len(node_seq)
+        perm = self._node_perm
+        shuffler.reset_perm(perm, n_nodes)          # canonical order each cycle
+        if shuffler.has_native_cycle:
+            self._native_cycle(pending, perm, node_seq, n_nodes)
+        else:
+            self._python_cycle(pending, perm, node_seq, n_nodes)
+        if self._pending_pods:
+            self._kick_scheduler()
+
+    def _native_cycle(self, pending, perm, node_seq, n_nodes):
+        """Scatter loop in the native helper: one call draws, scans and
+        picks nodes for every pending pod (identical algorithm to
+        ``_python_cycle``); only the binds come back to Python."""
+        n_pods = len(pending)
+        if n_pods > self._c_pod_cap:
+            import ctypes
+            cap = max(64, 2 * n_pods)
+            self._c_pod_cpu = (ctypes.c_int32 * cap)()
+            self._c_pod_mem = (ctypes.c_int32 * cap)()
+            self._c_bind = (ctypes.c_int32 * cap)()
+            self._c_pod_cap = cap
+        free_cpu, free_mem = self._c_free_cpu, self._c_free_mem
+        ready = bytearray(n_nodes)
+        for i, node in enumerate(node_seq):
+            free_cpu[i] = node.cpu_alloc - node.cpu_used
+            free_mem[i] = node.mem_alloc - node.mem_used
+            ready[i] = node.ready
+        pod_cpu, pod_mem = self._c_pod_cpu, self._c_pod_mem
+        for j, pod in enumerate(pending):
+            pod_cpu[j] = pod.cpu_m
+            pod_mem[j] = pod.mem_mi
+        self._shuffler.schedule_cycle(perm, n_nodes, free_cpu, free_mem,
+                                      bytes(ready), n_pods, pod_cpu, pod_mem,
+                                      self._c_bind, self._c_state)
+        bind = self._c_bind
+        for j, pod in enumerate(pending):
+            idx = bind[j]
+            if idx >= 0:
+                self._bind(pod, node_seq[idx])
+
+    def _python_cycle(self, pending, perm, node_seq, n_nodes):
+        shuffler = self._shuffler
+        # upper bounds on any single node's free capacity this cycle:
+        # binds only shrink node headroom, so the cycle-start maxima stay
+        # valid upper bounds — a pod requesting more than either can fit
+        # no node, and its first-fit scan (never its draws) is skipped
+        free_cpu_max = free_mem_max = 0
+        for node in node_seq:
+            if node.ready:
+                fc = node.cpu_alloc - node.cpu_used
+                fm = node.mem_alloc - node.mem_used
+                if fc > free_cpu_max:
+                    free_cpu_max = fc
+                if fm > free_mem_max:
+                    free_mem_max = fm
         for pod in pending:
-            self.rng.shuffle(node_list)             # scattered
-            for node in node_list:
-                if node.fits(pod.cpu_m, pod.mem_mi):
+            shuffler.draw_apply(perm, n_nodes)      # scattered
+            cpu, mem = pod.cpu_m, pod.mem_mi
+            if cpu > free_cpu_max or mem > free_mem_max:
+                continue                            # fits no node: skip scan
+            for idx in perm:
+                node = node_seq[idx]
+                if (node.ready and node.cpu_used + cpu <= node.cpu_alloc
+                        and node.mem_used + mem <= node.mem_alloc):
                     self._bind(pod, node)
                     break
-        if any(p.phase == PENDING and p.scheduled < 0
-               for p in self.pods.values()):
-            self._kick_scheduler()
 
     def _bind(self, pod: PodObj, node: NodeObj):
         pod.node = node.name
@@ -258,10 +414,14 @@ class Cluster:
         node.cpu_used += pod.cpu_m
         node.mem_used += pod.mem_mi
         pod._holding = True
+        tenant = pod.labels.get("tenant", "default")
+        self.tenant_holding_cpu[tenant] = \
+            self.tenant_holding_cpu.get(tenant, 0) + pod.cpu_m
+        self._pending_pods.pop((pod.namespace, pod.name), None)
         start_lat = self.p.pod_start_latency
         if pod.volume:
             start_lat += self.p.pvc_mount_latency
-        self.sim.after(start_lat, lambda: self._start(pod))
+        self.sim.after(start_lat, self._start, args=(pod,))
 
     def _start(self, pod: PodObj):
         if self.pods.get((pod.namespace, pod.name)) is not pod:
@@ -277,7 +437,7 @@ class Cluster:
         elif pod.payload is not None:
             pod.payload()                            # run, but virtual timing
         dur *= self.nodes[pod.node].slow_factor
-        self.sim.after(dur, lambda: self._finish(pod, SUCCEEDED))
+        self.sim.after(dur, self._finish, args=(pod, SUCCEEDED))
 
     def _finish(self, pod: PodObj, phase: str):
         if self.pods.get((pod.namespace, pod.name)) is not pod:
@@ -317,8 +477,9 @@ class Cluster:
     # Informer cache avoids; watch-driven callers never come here) ----------
     def list_pods(self, namespace: Optional[str] = None) -> List[PodObj]:
         self.api_calls += 1
-        return [p for (ns, _), p in self.pods.items()
-                if namespace is None or ns == namespace]
+        if namespace is None:
+            return list(self.pods.values())
+        return list(self._pods_by_ns.get(namespace, {}).values())
 
     def list_nodes(self) -> List[NodeObj]:
         self.api_calls += 1
@@ -327,6 +488,11 @@ class Cluster:
     def list_namespaces(self) -> List[NamespaceObj]:
         self.api_calls += 1
         return list(self.namespaces.values())
+
+    def list_pvcs(self, namespace: Optional[str] = None) -> List[PVCObj]:
+        self.api_calls += 1
+        return [p for (ns, _), p in self.pvcs.items()
+                if namespace is None or ns == namespace]
 
     def allocatable(self) -> Tuple[int, int]:
         cpu = sum(n.cpu_alloc for n in self.nodes.values() if n.ready)

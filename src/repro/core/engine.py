@@ -64,6 +64,27 @@ class WorkflowState:
     retries: Dict[str, int] = field(default_factory=dict)
     speculated: Set[str] = field(default_factory=set)
     done: bool = False
+    # incremental readiness (exact mirror of the all-tasks scan): unmet
+    # dependency counts, the ready-but-not-created pool, and each task's
+    # definition-order index to reproduce the scan's output order
+    unmet: Dict[str, int] = field(default_factory=dict)
+    ready_pool: Set[str] = field(default_factory=set)
+    order_idx: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        for i, (tid, t) in enumerate(self.wf.tasks.items()):
+            self.order_idx[tid] = i
+            self.unmet[tid] = len(t.inputs)
+            if not t.inputs:
+                self.ready_pool.add(tid)
+
+    def note_completed(self, tid: str):
+        """First completion of ``tid``: unlock its successors."""
+        self.completed.add(tid)
+        for nxt in self.wf.tasks[tid].outputs:
+            self.unmet[nxt] -= 1
+            if self.unmet[nxt] == 0:
+                self.ready_pool.add(nxt)
 
     @property
     def ns(self) -> str:
@@ -149,12 +170,12 @@ class KubeAdaptorEngine:
     # task container creator + resource gate
     # ------------------------------------------------------------------ #
     def _ready_tasks(self, ws: WorkflowState) -> List[str]:
-        out = []
-        for tid, t in ws.wf.tasks.items():
-            if tid in ws.completed or tid in ws.created:
-                continue
-            if all(d in ws.completed for d in t.inputs):
-                out.append(tid)
+        # ready_pool ⊇ {deps satisfied, not created/completed}; filter +
+        # definition-order sort reproduce the old all-tasks scan exactly
+        out = [tid for tid in ws.ready_pool
+               if tid not in ws.completed and tid not in ws.created]
+        if len(out) > 1:
+            out.sort(key=ws.order_idx.__getitem__)
         return ws.scheduler.order_ready(out)
 
     def _submit_ready(self, ws: WorkflowState):
@@ -190,6 +211,7 @@ class KubeAdaptorEngine:
                      duration_s=task.run_time(), payload=payload,
                      volume=ws.pvc, labels=labels)
         ws.created.add(task.id)
+        ws.ready_pool.discard(task.id)
         # charge headroom until the informer observes the pod — retried
         # pods and twins bypass admission but must not double-spend
         self.arbiter.reserve(ws.ns, name, ws.wf.tenant, cpu, mem)
@@ -237,8 +259,8 @@ class KubeAdaptorEngine:
             return                       # failed-pod removals handled elsewhere
         tid = pod.task_id
         first_completion = tid not in ws.completed
-        ws.completed.add(tid)
         if first_completion:
+            ws.note_completed(tid)
             if len(ws.completed) == len(ws.wf.tasks):
                 self._workflow_complete(ws)
             else:
@@ -262,6 +284,8 @@ class KubeAdaptorEngine:
         # remove the failed pod, then request generation again (§4.5)
         def recreate(_p):
             ws.created.discard(tid)
+            if tid not in ws.completed and ws.unmet[tid] == 0:
+                ws.ready_pool.add(tid)   # retry: eligible again
             if pod.name.endswith("-twin"):
                 return                   # only the primary is retried
             self._create_pod(ws, task)

@@ -4,6 +4,9 @@ The registry ties KubeAdaptor's modules together: informer handlers
 emit events ('pod-succeeded', 'pod-deleted', ...), registered callbacks
 respond in the same virtual instant — the quick create/destroy switch
 the paper credits for its resource-usage advantage.
+
+Dispatch passes positional args through the sim's event record (no
+per-callback lambda allocation on the hot pod-lifecycle path).
 """
 from __future__ import annotations
 
@@ -26,4 +29,7 @@ class EventRegistry:
         self.emitted[name] += 1
         for cb in list(self._subs[name]):
             # event dispatch is in-process: effectively immediate
-            self.sim.after(0.0, lambda c=cb: c(*args, **kw))
+            if kw:
+                self.sim.after(0.0, (lambda c=cb: c(*args, **kw)), note=name)
+            else:
+                self.sim.after(0.0, cb, note=name, args=args)

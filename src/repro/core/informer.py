@@ -6,15 +6,34 @@ objects into a local cache, and fires registered callbacks on state
 changes. Listers read the cache at ZERO apiserver cost — compare
 ``Cluster.api_calls`` between KubeAdaptor and the polling baselines to
 see the pressure difference the paper describes.
+
+Scale-out fast path (ISSUE 2): the informer consumes the cluster's
+*batched* watch stream (one sim event per kind per delivery instant)
+and applies each batch in one cache-sync event; listers serve a
+generation-cached list instead of copying the cache per call; handlers
+dispatch from per-event-type callback lists built at registration time.
+Every cache write is a snapshot (watch events already are; resyncs now
+clone too), which lets the pod informer maintain exact running
+aggregates — non-terminal requested cpu/mem, total and per tenant — so
+admission's ``requested()`` is O(1) instead of a cache scan.
+
+Resync now *reconciles*: keys whose objects vanished from the listed
+set without a DELETED watch event (a missed event) are dropped and
+their ``on_delete`` handlers fired. A key must be stale for two
+consecutive resyncs before it is dropped — one resync interval is far
+longer than the watch+informer pipeline, so an in-flight DELETED event
+can never race the reconciler and double-fire.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Set
 
 from repro.core import calibration as cal
-from repro.core.cluster import (ADDED, DELETED, MODIFIED, Cluster, WatchEvent)
+from repro.core.cluster import (ADDED, DELETED, PENDING, RUNNING, Cluster,
+                                WatchEvent)
 from repro.core.sim import Sim
+
+_NON_TERMINAL = (PENDING, RUNNING)
 
 
 def _key(kind: str, obj: Any) -> Any:
@@ -23,13 +42,6 @@ def _key(kind: str, obj: Any) -> Any:
     if kind == "pvc":
         return (obj.namespace, obj.name)
     return obj.name
-
-
-@dataclass
-class Handlers:
-    on_add: Optional[Callable] = None
-    on_update: Optional[Callable] = None
-    on_delete: Optional[Callable] = None
 
 
 class Informer:
@@ -42,54 +54,140 @@ class Informer:
         self.kind = kind
         self.p = params
         self.cache: Dict[Any, Any] = {}
-        self.handlers: List[Handlers] = []
         self.events_seen = 0
-        cluster.watch(kind, self._on_watch_event)
+        self.generation = 0                  # bumps on every cache write
+        self._add_cbs: List[Callable] = []
+        self._update_cbs: List[Callable] = []
+        self._delete_cbs: List[Callable] = []
+        self._lister_gen = -1
+        self._lister_cache: Dict[Optional[str], List[Any]] = {}
+        self._stale_once: Set[Any] = set()   # reconcile grace (see resync)
+        # exact running aggregates over the pod cache (snapshots make
+        # cache writes the only mutation point, so these always equal a
+        # full scan — pinned by tests/test_scale_core.py)
+        self._track_pods = kind == "pod"
+        self.nonterminal_cpu = 0
+        self.nonterminal_mem = 0
+        self.nonterminal_cpu_by_tenant: Dict[str, int] = {}
+        self._list_fn = {
+            "pod": cluster.list_pods,
+            "node": cluster.list_nodes,
+            "namespace": cluster.list_namespaces,
+            "pvc": cluster.list_pvcs,
+        }.get(kind, lambda: [])
+        cluster.watch_batch(kind, self._on_watch_batch)
         self._initial_list()
         self._schedule_resync()
 
-    def _initial_list(self):
-        for obj in {"pod": self.cluster.list_pods,
-                    "node": self.cluster.list_nodes,
-                    "namespace": self.cluster.list_namespaces}.get(
-                        self.kind, lambda: [])():
-            self.cache[_key(self.kind, obj)] = obj
+    # ---- cache writes (the only mutation points) ------------------------
+    def _cache_set(self, k: Any, obj: Any):
+        self.generation += 1
+        if self._track_pods:
+            old = self.cache.get(k)
+            if old is not None and old.phase in _NON_TERMINAL:
+                self._untrack(old)
+            if obj.phase in _NON_TERMINAL:
+                self._track(obj)
+        self.cache[k] = obj
 
-    def _on_watch_event(self, ev: WatchEvent):
-        # watch_latency already applied by the cluster; informer adds its own
-        # processing/cache-sync latency before handlers observe the change.
-        self.sim.after(self.p.informer_latency, lambda: self._apply(ev))
+    def _cache_pop(self, k: Any) -> Optional[Any]:
+        old = self.cache.pop(k, None)
+        if old is not None:
+            self.generation += 1
+            if self._track_pods and old.phase in _NON_TERMINAL:
+                self._untrack(old)
+        return old
+
+    def _track(self, pod: Any):
+        self.nonterminal_cpu += pod.cpu_m
+        self.nonterminal_mem += pod.mem_mi
+        t = pod.labels.get("tenant", "default")
+        by = self.nonterminal_cpu_by_tenant
+        by[t] = by.get(t, 0) + pod.cpu_m
+
+    def _untrack(self, pod: Any):
+        self.nonterminal_cpu -= pod.cpu_m
+        self.nonterminal_mem -= pod.mem_mi
+        t = pod.labels.get("tenant", "default")
+        self.nonterminal_cpu_by_tenant[t] -= pod.cpu_m
+
+    # ---- list-watch ------------------------------------------------------
+    def _initial_list(self):
+        for obj in self._list_fn():
+            self._cache_set(_key(self.kind, obj), obj.clone())
+
+    def _on_watch_batch(self, evs: List[WatchEvent]):
+        # watch_latency already applied by the cluster; informer adds its
+        # own processing/cache-sync latency before handlers observe it.
+        self.sim.after(self.p.informer_latency, self._apply_batch,
+                       note=f"informer:{self.kind}", args=(evs,))
+
+    def _apply_batch(self, evs: List[WatchEvent]):
+        for ev in evs:
+            self._apply(ev)
 
     def _apply(self, ev: WatchEvent):
         self.events_seen += 1
         k = _key(self.kind, ev.obj)
-        if ev.type == DELETED:
-            self.cache.pop(k, None)
+        type_ = ev.type
+        if type_ == DELETED:
+            if self._cache_pop(k) is None:
+                return       # already reconciled away — don't double-fire
+            cbs = self._delete_cbs
         else:
-            self.cache[k] = ev.obj
-        for h in self.handlers:
-            cb = {ADDED: h.on_add, MODIFIED: h.on_update, DELETED: h.on_delete}[ev.type]
-            if cb:
-                cb(ev.obj)
+            self._cache_set(k, ev.obj)
+            cbs = self._add_cbs if type_ == ADDED else self._update_cbs
+        for cb in cbs:
+            cb(ev.obj)
 
     def _schedule_resync(self):
         def resync():
-            self._initial_list()          # re-list into cache (self-sync §3.2)
+            self._resync_reconcile()      # self-sync §3.2 + stale-key GC
             self._schedule_resync()
-        self.sim.after(self.p.resync_interval, resync, daemon=True)
+        self.sim.after(self.p.resync_interval, resync, daemon=True,
+                       note=f"resync:{self.kind}")
+
+    def _resync_reconcile(self):
+        listed: Set[Any] = set()
+        for obj in self._list_fn():
+            k = _key(self.kind, obj)
+            listed.add(k)
+            self._cache_set(k, obj.clone())
+        stale = [k for k in self.cache if k not in listed]
+        drop = [k for k in stale if k in self._stale_once]
+        self._stale_once = set(stale).difference(drop)
+        for k in drop:
+            obj = self._cache_pop(k)
+            for cb in self._delete_cbs:
+                cb(obj)
 
     # ---- lister: local-cache reads, no apiserver cost -------------------
     def lister(self, namespace: Optional[str] = None) -> List[Any]:
-        objs = list(self.cache.values())
-        if namespace is not None and self.kind in ("pod", "pvc"):
-            objs = [o for o in objs if o.namespace == namespace]
+        """Cached snapshot list, invalidated on cache mutation. Treat
+        the returned list as read-only — it is shared between calls."""
+        if self._lister_gen != self.generation:
+            self._lister_cache.clear()
+            self._lister_gen = self.generation
+        objs = self._lister_cache.get(namespace)
+        if objs is None:
+            if namespace is not None and self.kind in ("pod", "pvc"):
+                objs = [o for o in self.cache.values()
+                        if o.namespace == namespace]
+            else:
+                objs = list(self.cache.values())
+            self._lister_cache[namespace] = objs
         return objs
 
     def get(self, key) -> Optional[Any]:
         return self.cache.get(key)
 
     def add_handlers(self, on_add=None, on_update=None, on_delete=None):
-        self.handlers.append(Handlers(on_add, on_update, on_delete))
+        if on_add:
+            self._add_cbs.append(on_add)
+        if on_update:
+            self._update_cbs.append(on_update)
+        if on_delete:
+            self._delete_cbs.append(on_delete)
 
 
 class InformerSet:

@@ -16,6 +16,13 @@ delay (submission -> namespace creation) is measurable; the sampler
 also breaks bound node usage down per tenant; ``tenant_summary``
 aggregates makespan / queueing delay / lifecycle / admission
 deferrals per tenant for the multi-tenant benchmarks.
+
+Scale tier (ISSUE 2): ``sample_mode="streaming"`` replaces the
+unbounded per-sample lists with flat-memory accumulators
+(``core/stats.StreamingStat``: count/mean/max + fixed reservoir for
+percentiles) — at 1000 workflows the sampler would otherwise grow
+without bound. Paper-scale runs keep the default ``"full"`` mode, so
+``samples``/``usage_rate_over`` behave exactly as before.
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ from repro.core import calibration as cal
 from repro.core.cluster import Cluster, SUCCEEDED
 from repro.core.dag import Workflow
 from repro.core.sim import Sim
+from repro.core.stats import StreamingStat
 
 
 @dataclass
@@ -57,13 +65,20 @@ class WorkflowRecord:
 
 class MetricsCollector:
     def __init__(self, sim: Sim, cluster: Cluster,
-                 params: cal.ClusterParams = cal.DEFAULT_PARAMS):
+                 params: cal.ClusterParams = cal.DEFAULT_PARAMS,
+                 sample_mode: str = "full"):
+        if sample_mode not in ("full", "streaming"):
+            raise ValueError(f"unknown sample_mode {sample_mode!r}")
         self.sim = sim
         self.cluster = cluster
         self.p = params
+        self.sample_mode = sample_mode
         self.workflows: Dict[Tuple[str, int], WorkflowRecord] = {}
         self.samples: List[Tuple[float, int, int]] = []   # (t, cpu_m, mem_mi)
         self.tenant_samples: List[Tuple[float, Dict[str, int]]] = []
+        self.cpu_stat = StreamingStat()
+        self.mem_stat = StreamingStat()
+        self.tenant_cpu_stats: Dict[str, StreamingStat] = {}
         self.admission_deferrals: Dict[str, int] = {}
         self._sampling = False
 
@@ -105,17 +120,28 @@ class MetricsCollector:
             return
         self._sampling = True
 
+        streaming = self.sample_mode == "streaming"
+
         def sample():
             cpu, mem = self.cluster.used()
-            self.samples.append((self.sim.now(), cpu, mem))
-            by_tenant: Dict[str, int] = {}
-            for pod in self.cluster.pods.values():
-                if pod._holding:
-                    t = pod.labels.get("tenant", "default")
-                    by_tenant[t] = by_tenant.get(t, 0) + pod.cpu_m
-            self.tenant_samples.append((self.sim.now(), by_tenant))
+            # cluster-maintained per-tenant holdings; zero entries are
+            # stripped to match the old holding-pod scan exactly
+            by_tenant = {t: c for t, c
+                         in self.cluster.tenant_holding_cpu.items() if c}
+            if streaming:
+                self.cpu_stat.add(cpu)
+                self.mem_stat.add(mem)
+                for t, c in by_tenant.items():
+                    stat = self.tenant_cpu_stats.get(t)
+                    if stat is None:
+                        stat = self.tenant_cpu_stats[t] = StreamingStat()
+                    stat.add(c)
+            else:
+                self.samples.append((self.sim.now(), cpu, mem))
+                self.tenant_samples.append((self.sim.now(), by_tenant))
             if self._sampling:
-                self.sim.after(self.p.sample_period, sample, daemon=True)
+                self.sim.after(self.p.sample_period, sample, daemon=True,
+                               note="resource-sampler")
 
         sample()
 
@@ -125,6 +151,11 @@ class MetricsCollector:
     # ---- derived metrics (the figures) -------------------------------------
     def pod_exec_times(self, workflow: Optional[str] = None,
                        include_virtual: bool = False) -> List[float]:
+        if not self.cluster.retain_pod_log:
+            raise RuntimeError(
+                "pod_exec_times needs the per-pod log; this cluster was "
+                "built with retain_pod_log=False — use "
+                "cluster.exec_stat (streaming) instead")
         out = []
         for pod in self.cluster.pod_log:
             if workflow is not None and pod.workflow != workflow:
@@ -165,6 +196,23 @@ class MetricsCollector:
                 if dep not in started_at or started_at[dep] > ts + 1e-9:
                     return False
         return len(rec.starts) >= len(wf.tasks)
+
+    def overall_usage(self) -> Tuple[float, float]:
+        """Run-wide average (cpu_rate, mem_rate) vs allocatable; works
+        in both sample modes (streaming keeps only the accumulators)."""
+        cpu_a, mem_a = self.cluster.allocatable()
+        if cpu_a == 0:
+            return 0.0, 0.0
+        if self.sample_mode == "streaming":
+            if not self.cpu_stat.count:
+                return 0.0, 0.0
+            return self.cpu_stat.mean / cpu_a, self.mem_stat.mean / mem_a
+        if not self.samples:
+            return 0.0, 0.0
+        n = len(self.samples)
+        cpu = sum(c for _, c, _ in self.samples) / n / cpu_a
+        mem = sum(m for _, _, m in self.samples) / n / mem_a
+        return cpu, mem
 
     def usage_rate_over(self, t0: float, t1: float) -> Tuple[float, float]:
         """Average (cpu_rate, mem_rate) over [t0, t1] vs allocatable."""

@@ -31,11 +31,34 @@ contend for the same headroom, so the arbiter adds:
 
 Tenants are registered with ``set_tenant(name, priority=, weight=)``;
 unregistered tenants get priority 0 / weight 1.
+
+Scale-out evaluation (ISSUE 2): the generic re-sort-everything loop
+(`_evaluate_generic`, kept as reference and as the path for custom
+policies) is O(P log P) per wake-up — ruinous at a 1000-workflow
+backlog where every pod completion re-evaluates thousands of pending
+requests. The built-in policies run specialized walks that reproduce
+the generic loop's grant sequence EXACTLY (same order, same deferral
+counts — pinned by tests/test_scale_core.py):
+
+* fifo        walks the seq-ordered pending dict directly (no copy);
+* priority    walks a bisect-maintained (-priority, seq) list and stops
+              once a blocked higher class makes further grants illegal;
+* fair-share  lazily merges per-tenant FIFO queues through a heap keyed
+              (usage/weight, seq), identical to sorting every request;
+
+all three stop early when remaining headroom is below the smallest
+pending request (tracked by value-count multisets), so a saturated
+evaluate is O(1) instead of O(P). ``requested()`` reads the pod
+informer's running aggregates instead of scanning its cache, and
+``allocatable()`` is cached on the node informer's generation.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+import heapq
+from bisect import bisect_left, insort
+from collections import Counter, deque
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.cluster import FAILED, PENDING, RUNNING, SUCCEEDED
 from repro.core.dag import Task
@@ -45,16 +68,28 @@ from repro.core.informer import InformerSet
 class ResourceGatherer:
     def __init__(self, informers: InformerSet):
         self.inf = informers
+        self._alloc_cache: Tuple[int, int] = (0, 0)
+        self._alloc_gen = -1
 
     def allocatable(self) -> Tuple[int, int]:
-        cpu = mem = 0
-        for node in self.inf.nodes.lister():
-            if node.ready:
-                cpu += node.cpu_alloc
-                mem += node.mem_alloc
-        return cpu, mem
+        nodes = self.inf.nodes
+        if nodes.generation != self._alloc_gen:
+            cpu = mem = 0
+            for node in nodes.lister():
+                if node.ready:
+                    cpu += node.cpu_alloc
+                    mem += node.mem_alloc
+            self._alloc_cache = (cpu, mem)
+            self._alloc_gen = nodes.generation
+        return self._alloc_cache
 
     def requested(self) -> Tuple[int, int]:
+        pods = self.inf.pods
+        return pods.nonterminal_cpu, pods.nonterminal_mem
+
+    def _requested_scan(self) -> Tuple[int, int]:
+        """Reference cache scan; equals ``requested()`` at all times
+        (the informer aggregates are exact — see test_scale_core)."""
         cpu = mem = 0
         for pod in self.inf.pods.lister():
             if pod.phase in (PENDING, RUNNING):
@@ -94,6 +129,8 @@ class AdmissionRequest:
     task: Task
     create: Callable[[Task], None]
     seq: int
+    cpu: int = 0                   # cached task.resource_request()
+    mem: int = 0
     deferred: bool = False
 
     def key(self) -> Tuple[str, str]:
@@ -193,7 +230,21 @@ class AdmissionArbiter(ResourceGatherer):
         self.tenants: Dict[str, TenantShare] = {}
         self.admitted = 0
         self.deferrals = 0
+        self.max_pending = 0           # peak admission-queue depth
         self._seq = 0
+        self._reserved_cpu = 0
+        self._reserved_mem = 0
+        self._fresh: List[AdmissionRequest] = []   # not yet deferral-checked
+        self._min_cpu = Counter()      # value -> count over pending requests
+        self._min_mem = Counter()
+        # priority: (-tenant priority, seq, request), bisect-sorted
+        self._prio_order: List[Tuple[int, int, AdmissionRequest]] = []
+        # fair-share: per-tenant FIFO of requests (lazy-deleted)
+        self._by_tenant: Dict[str, Deque[AdmissionRequest]] = {}
+        # subclasses may override order()/may_backfill(): only the exact
+        # built-in types take the specialized walks
+        self._fast = type(self.policy) in (FifoPolicy, PriorityPolicy,
+                                           FairSharePolicy)
 
     # -- tenant registry ----------------------------------------------------
     def set_tenant(self, name: str, priority: int = 0, weight: float = 1.0):
@@ -210,10 +261,16 @@ class AdmissionArbiter(ResourceGatherer):
         non-terminal — from that point ``requested()`` accounts for
         them. (A FAILED/SUCCEEDED cache entry can be a *previous*
         incarnation of a retried pod name, so it doesn't count.)"""
+        reserved = self.reserved
+        if not reserved:
+            return
         cache = self.inf.pods.cache
-        for key in [k for k in self.reserved
-                    if k in cache and cache[k].phase in (PENDING, RUNNING)]:
-            del self.reserved[key]
+        drop = [k for k in reserved
+                if k in cache and cache[k].phase in (PENDING, RUNNING)]
+        for key in drop:
+            _t, cpu, mem, _at = reserved.pop(key)
+            self._reserved_cpu -= cpu
+            self._reserved_mem -= mem
 
     def reserve(self, namespace: str, name: str, tenant: str,
                 cpu: int, mem: int):
@@ -223,26 +280,28 @@ class AdmissionArbiter(ResourceGatherer):
         the watch+informer latency double-spend window. The timestamp
         lets ``pod_removed`` tell which incarnation of a reused pod name
         a reservation belongs to."""
-        now = self.inf.pods.sim.now()
-        self.reserved.setdefault((namespace, name), (tenant, cpu, mem, now))
+        key = (namespace, name)
+        if key not in self.reserved:
+            self.reserved[key] = (tenant, cpu, mem, self.inf.pods.sim.now())
+            self._reserved_cpu += cpu
+            self._reserved_mem += mem
+
+    def _drop_reservation(self, key: Tuple[str, str]):
+        held = self.reserved.pop(key, None)
+        if held is not None:
+            self._reserved_cpu -= held[1]
+            self._reserved_mem -= held[2]
 
     def available(self) -> Tuple[int, int]:
         self._sync_reservations()
         ac, am = super().available()
-        for _, cpu, mem, _t in self.reserved.values():
-            ac -= cpu
-            am -= mem
-        return ac, am
+        return ac - self._reserved_cpu, am - self._reserved_mem
 
     def tenant_usage_cpu(self) -> Dict[str, int]:
         """CPU currently held per tenant: informer-visible non-terminal
         pods plus not-yet-visible reservations."""
         self._sync_reservations()
-        usage: Dict[str, int] = {}
-        for pod in self.inf.pods.lister():
-            if pod.phase in (PENDING, RUNNING):
-                t = pod.labels.get("tenant", "default")
-                usage[t] = usage.get(t, 0) + pod.cpu_m
+        usage = dict(self.inf.pods.nonterminal_cpu_by_tenant)
         for tenant, cpu, _mem, _t in self.reserved.values():
             usage[tenant] = usage.get(tenant, 0) + cpu
         return usage
@@ -253,23 +312,211 @@ class AdmissionArbiter(ResourceGatherer):
         """Queue admission requests (idempotent per (namespace, task))
         and immediately evaluate the pending set."""
         for task in tasks:
+            cpu, mem = task.resource_request()
             req = AdmissionRequest(namespace, tenant, task, create,
-                                   seq=self._seq)
+                                   seq=self._seq, cpu=cpu, mem=mem)
             self._seq += 1
-            self.pending.setdefault(req.key(), req)
+            key = req.key()
+            if key not in self.pending:
+                self.pending[key] = req
+                self._index_add(req)
+        if len(self.pending) > self.max_pending:
+            self.max_pending = len(self.pending)
         self.evaluate()
+
+    def _index_add(self, req: AdmissionRequest):
+        self._fresh.append(req)
+        self._min_cpu[req.cpu] += 1
+        self._min_mem[req.mem] += 1
+        if isinstance(self.policy, PriorityPolicy):
+            insort(self._prio_order,
+                   (-self.tenant(req.tenant).priority, req.seq, req))
+        elif isinstance(self.policy, FairSharePolicy):
+            self._by_tenant.setdefault(req.tenant, deque()).append(req)
+
+    def _counters_remove(self, req: AdmissionRequest):
+        self._min_cpu[req.cpu] -= 1
+        if not self._min_cpu[req.cpu]:
+            del self._min_cpu[req.cpu]
+        self._min_mem[req.mem] -= 1
+        if not self._min_mem[req.mem]:
+            del self._min_mem[req.mem]
+
+    def _index_remove(self, req: AdmissionRequest):
+        self._counters_remove(req)
+        if isinstance(self.policy, PriorityPolicy):
+            order = self._prio_order
+            # seq is unique, so tuple comparison never reaches the
+            # request; a 2-tuple probe sorts just before its entry
+            i = bisect_left(order, (-self.tenant(req.tenant).priority,
+                                    req.seq))
+            if i < len(order) and order[i][2] is req:
+                del order[i]
+            else:   # priority changed since insert: find by identity
+                for j, entry in enumerate(order):
+                    if entry[2] is req:
+                        del order[j]
+                        break
+        # fair-share per-tenant deques are lazy-deleted during the walk
+
+    def _create_bookkeep(self, req: AdmissionRequest) -> bool:
+        """Fire the grant callback; True when it consumed headroom (a
+        stale grant the engine declined consumes none) — identical
+        bookkeeping to the generic loop."""
+        if req.create(req.task) is not False:
+            self.admitted += 1
+            self.tenant(req.tenant).granted += 1
+            return True
+        return False
+
+    def _grant(self, req: AdmissionRequest) -> bool:
+        del self.pending[req.key()]
+        self._index_remove(req)
+        return self._create_bookkeep(req)
+
+    def _mark_deferred(self):
+        """Every request still pending after an evaluate has waited at
+        least once. Only requests submitted since the last evaluate can
+        be newly deferred, so the check is O(new), not O(pending)."""
+        if self._fresh:
+            pending = self.pending
+            for req in self._fresh:
+                if not req.deferred and pending.get(req.key()) is req:
+                    req.deferred = True
+                    self.deferrals += 1
+                    self.tenant(req.tenant).deferred += 1
+                    if self.on_defer:
+                        self.on_defer(req.tenant)
+            self._fresh.clear()
+
+    def _no_fit_possible(self, ac: int, am: int) -> bool:
+        """True when headroom is below every pending request on at
+        least one axis — no walk can grant anything."""
+        return (ac < min(self._min_cpu) if self._min_cpu else False) or \
+               (am < min(self._min_mem) if self._min_mem else False)
 
     def evaluate(self):
         """Grant as many pending requests as headroom (and the policy's
-        backfill rule) allows. Headroom is decremented locally per grant
-        (one cluster scan per evaluate, not per grant); fifo/priority
-        orderings are grant-invariant so they grant in a single sorted
-        pass, while fair-share re-ranks after every grant because its
-        usage/weight key shifts as grants accrue. The grant callback
-        performs the actual pod creation and charges the reservation
-        (via ``reserve`` inside the engine's create path); it returns
-        False for a stale grant the engine declined, which then counts
-        toward nothing."""
+        backfill rule) allows; see the module docstring for the
+        specialized walks and their equivalence to the generic loop."""
+        if not self._fast:
+            self._evaluate_generic()
+            self._mark_deferred()
+            return
+        # available() is called unconditionally, exactly like the
+        # generic loop: its _sync_reservations side effect must run at
+        # the same instants or reservations outlive their informer
+        # visibility window and headroom diverges
+        ac, am = self.available()
+        if self.pending:
+            if isinstance(self.policy, FairSharePolicy):
+                self._walk_fair_share(ac, am)
+            elif not self._no_fit_possible(ac, am):
+                if isinstance(self.policy, FifoPolicy):
+                    self._walk_fifo(ac, am)
+                else:
+                    self._walk_priority(ac, am)
+        self._mark_deferred()
+
+    # -- specialized walks (exact replicas of _evaluate_generic) ------------
+    def _walk_fifo(self, ac: int, am: int):
+        # generic fifo: one pass in seq order, always-backfill — i.e.
+        # first-fit down the queue. The pending dict IS seq-ordered, so
+        # walk it directly; pending deletion is deferred past the loop
+        # (grants never mutate the dict — verified: the engine's create
+        # path only schedules sim events and charges reservations).
+        grants: List[AdmissionRequest] = []
+        for req in self.pending.values():
+            if req.cpu <= ac and req.mem <= am:
+                grants.append(req)
+                self._counters_remove(req)
+                if self._create_bookkeep(req):
+                    ac -= req.cpu
+                    am -= req.mem
+                    if self._no_fit_possible(ac, am):
+                        break      # nothing further can fit
+        for req in grants:
+            del self.pending[req.key()]
+
+    def _walk_priority(self, ac: int, am: int):
+        # generic priority: one pass in (-priority, seq) order; a
+        # blocked request bars every strictly-lower class behind it, so
+        # the walk may stop at the first lower class after a block.
+        order = self._prio_order
+        grants: List[AdmissionRequest] = []
+        max_blocked_prio: Optional[int] = None
+        i = 0
+        while i < len(order):
+            req = order[i][2]
+            if self.pending.get(req.key()) is not req:
+                del order[i]       # ghost entry from a priority change
+                continue
+            prio = self.tenant(req.tenant).priority
+            if max_blocked_prio is not None and prio < max_blocked_prio:
+                break              # all remaining are lower still
+            if req.cpu <= ac and req.mem <= am:
+                del order[i]
+                grants.append(req)
+                self._counters_remove(req)
+                if self._create_bookkeep(req):
+                    ac -= req.cpu
+                    am -= req.mem
+                    if self._no_fit_possible(ac, am):
+                        break
+                continue           # entries shifted left: same index
+            if max_blocked_prio is None or prio > max_blocked_prio:
+                max_blocked_prio = prio
+            i += 1
+        for req in grants:
+            del self.pending[req.key()]
+
+    def _walk_fair_share(self, ac: int, am: int):
+        # generic fair-share re-sorts all requests by (usage/weight,
+        # seq) and grants the first fit, once per grant. The lazy merge
+        # over per-tenant FIFO queues pops requests in exactly that
+        # order (seq ties across equal-ratio tenants included) without
+        # materializing it.
+        pending = self.pending
+        while True:
+            if not pending:
+                return
+            # one sync per round, mirroring the generic loop's order()
+            # call at the top of every pass (final no-grant pass too)
+            usage = self.tenant_usage_cpu()
+            if self._no_fit_possible(ac, am):
+                return
+            heap = []
+            for tenant, q in self._by_tenant.items():
+                while q and pending.get(q[0].key()) is not q[0]:
+                    q.popleft()    # granted/forgotten leftovers
+                if q:
+                    share = self.tenant(tenant)
+                    ratio = usage.get(tenant, 0) / max(share.weight, 1e-9)
+                    heap.append((ratio, q[0].seq, tenant, 0))
+            if not heap:
+                return
+            heapq.heapify(heap)
+            granted = False
+            while heap:
+                ratio, _seq, tenant, idx = heapq.heappop(heap)
+                q = self._by_tenant[tenant]
+                req = q[idx]       # push-time staleness check keeps
+                if req.cpu <= ac and req.mem <= am:   # entries live
+                    if self._grant(req):
+                        ac -= req.cpu
+                        am -= req.mem
+                    granted = True
+                    break          # re-rank with the new usage
+                nxt = idx + 1
+                while nxt < len(q) and pending.get(q[nxt].key()) is not q[nxt]:
+                    nxt += 1
+                if nxt < len(q):
+                    heapq.heappush(heap, (ratio, q[nxt].seq, tenant, nxt))
+            if not granted:
+                return
+
+    # -- generic loop (reference + custom-policy path) -----------------------
+    def _evaluate_generic(self):
         ac, am = self.available()
         dynamic = getattr(self.policy, "dynamic_order", False)
         progress = True
@@ -281,10 +528,7 @@ class AdmissionArbiter(ResourceGatherer):
                 if (cpu <= ac and mem <= am
                         and all(self.policy.may_backfill(b, req, self)
                                 for b in blocked)):
-                    del self.pending[req.key()]
-                    if req.create(req.task) is not False:
-                        self.admitted += 1
-                        self.tenant(req.tenant).granted += 1
+                    if self._grant(req):
                         ac -= cpu
                         am -= mem
                     progress = True
@@ -294,14 +538,6 @@ class AdmissionArbiter(ResourceGatherer):
                     blocked.append(req)
             if not dynamic:
                 break                  # one sorted pass granted all that fit
-        # whatever is still pending had to wait at least once
-        for req in self.pending.values():
-            if not req.deferred:
-                req.deferred = True
-                self.deferrals += 1
-                self.tenant(req.tenant).deferred += 1
-                if self.on_defer:
-                    self.on_defer(req.tenant)
 
     def pod_removed(self, pod):
         """A pod freed resources: drop its reservation (if still held)
@@ -315,12 +551,13 @@ class AdmissionArbiter(ResourceGatherer):
         key = (pod.namespace, pod.name)
         held = self.reserved.get(key)
         if held is not None and held[3] <= pod.created:
-            del self.reserved[key]
+            self._drop_reservation(key)
         if self.pending:
             self.evaluate()
 
     def forget_namespace(self, namespace: str):
         for key in [k for k in self.pending if k[0] == namespace]:
-            del self.pending[key]
+            req = self.pending.pop(key)
+            self._index_remove(req)
         for key in [k for k in self.reserved if k[0] == namespace]:
-            del self.reserved[key]
+            self._drop_reservation(key)

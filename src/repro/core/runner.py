@@ -71,7 +71,9 @@ class ControlPlane:
                  speculative: bool = False,
                  scheduler: str = "topological",
                  admission_policy: str = "fifo",
-                 sample_resources: bool = True):
+                 sample_resources: bool = True,
+                 sample_mode: str = "full",
+                 retain_pod_log: bool = True):
         if engine_name not in ENGINES:
             raise ValueError(f"unknown engine {engine_name!r}; "
                              f"expected one of {sorted(ENGINES)}")
@@ -86,9 +88,11 @@ class ControlPlane:
         self.sample_resources = sample_resources
         self.sim = Sim()
         self.cluster = Cluster(self.sim, params, cluster_cfg,
-                               payload_mode=payload_mode, seed=seed)
+                               payload_mode=payload_mode, seed=seed,
+                               retain_pod_log=retain_pod_log)
         self.volumes = VolumeManager(self.sim, self.cluster, params)
-        self.metrics = MetricsCollector(self.sim, self.cluster, params)
+        self.metrics = MetricsCollector(self.sim, self.cluster, params,
+                                        sample_mode=sample_mode)
         self.arbiter: Optional[AdmissionArbiter] = None
 
         if engine_name == "kubeadaptor":

@@ -1,0 +1,356 @@
+"""Exact bulk replica of ``random.Random.shuffle`` for hot loops.
+
+The disordered level-2 scheduler (cluster.py) must keep the paper's
+"disorderly, scattered" semantics bit-for-bit: the same seeded RNG and
+the same draw sequence, so a fixed seed reproduces the same pod->node
+binding sequence before and after any optimization. That rules out
+fewer draws — but not cheaper ones.
+
+CPython's ``shuffle`` burns one Python-level ``_randbelow`` call per
+element: ``k = n.bit_length(); r = getrandbits(k); while r >= n:
+r = getrandbits(k)``, and each ``getrandbits(k<=32)`` consumes exactly
+one Mersenne-Twister word (``genrand_uint32() >> (32 - k)``).
+``ExactShuffler`` consumes the identical word stream, but fetches it in
+bulk: one ``getrandbits(32 * N)`` C call yields N words in genrand
+order (the bignum's little-end word is the first draw), so the
+Fisher-Yates rejection sampling can be replayed against a flat buffer.
+
+Two backends replay the stream:
+
+* native — a ~30-line C helper (compiled once with the system cc into
+  ``_native/``, loaded via ctypes) drains draws and applies the swaps
+  to an int32 permutation array in one call;
+* python — a tight loop over the unpacked words (used when no compiler
+  is available, or under ``REPRO_SHUFFLE_NO_NATIVE=1``).
+
+Both produce identical permutations and identical word consumption —
+pinned against ``random.shuffle`` by tests/test_scale_core.py.
+
+The wrapped ``random.Random`` must have no other consumers while a
+shuffler is attached (words are buffered ahead); the cluster's
+scheduling RNG satisfies this — it is consumed exclusively by the
+scheduler's shuffles.
+"""
+from __future__ import annotations
+
+import ctypes
+import hashlib
+import os
+import random
+import struct
+import subprocess
+import tempfile
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+_WORDS_PER_FETCH = 4096
+_UNPACK = struct.Struct(f"<{_WORDS_PER_FETCH}I").unpack
+
+# _SHIFT[n] = 32 - n.bit_length(): getrandbits(k) == word >> _SHIFT[n]
+_SHIFT: List[int] = [32, 31]
+
+
+def _ensure_shift(n: int) -> None:
+    while len(_SHIFT) <= n:
+        _SHIFT.append(32 - len(_SHIFT).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# native backend: Fisher-Yates draw+apply over the word buffer
+# ---------------------------------------------------------------------------
+_C_SRC = r"""
+#include <stdint.h>
+
+/* Replay random.shuffle's draw stream for a list of `length`, applying
+ * the swaps to `perm`. Resumes at element `start` (0-based, element j
+ * swaps index length-1-j); returns the next unfinished element (==
+ * length-1 when done) and writes the word cursor back to *pos_out.
+ * Stops early when the word buffer runs dry so the caller can refill. */
+long ka_draw_apply(const uint32_t *words, long n_words, long pos,
+                   long length, long start, int32_t *perm, long *pos_out)
+{
+    long top = length - 1;
+    long j = start;
+    for (; j < top; j++) {
+        uint32_t n = (uint32_t)(length - j);
+        int shift = __builtin_clz(n);           /* 32 - bit_length(n) */
+        uint32_t r;
+        for (;;) {
+            if (pos >= n_words) { *pos_out = pos; return j; }
+            r = words[pos++] >> shift;
+            if (r < n) break;
+        }
+        int32_t i = (int32_t)(length - 1 - j);
+        int32_t tmp = perm[i];
+        perm[i] = perm[r];
+        perm[r] = tmp;
+    }
+    *pos_out = pos;
+    return j;
+}
+
+/* One disordered-scheduler cycle body: for each pending pod, reshuffle
+ * the node permutation (identical draw stream to random.shuffle) and
+ * first-fit scan it against the free-capacity arrays, recording the
+ * chosen node index (or -1) in bind_out and charging the copy of the
+ * free arrays so later pods in the cycle see earlier binds.
+ * state[0] = next pod, state[1] = next shuffle element of that pod
+ * (resume point when the word buffer runs dry). Returns 1 when the
+ * cycle completed, 0 when the caller must refill and call again. */
+long ka_schedule_cycle(const uint32_t *words, long n_words, long pos,
+                       long n_nodes, int32_t *perm,
+                       int32_t *free_cpu, int32_t *free_mem,
+                       const uint8_t *ready,
+                       long n_pods, const int32_t *pod_cpu,
+                       const int32_t *pod_mem,
+                       int32_t *bind_out, long *state, long *pos_out)
+{
+    long j = state[0];
+    long elem = state[1];
+    long top = n_nodes - 1;
+    for (; j < n_pods; j++, elem = 0) {
+        for (; elem < top; elem++) {
+            uint32_t n = (uint32_t)(n_nodes - elem);
+            int shift = __builtin_clz(n);
+            uint32_t r;
+            for (;;) {
+                if (pos >= n_words) {
+                    state[0] = j; state[1] = elem; *pos_out = pos;
+                    return 0;
+                }
+                r = words[pos++] >> shift;
+                if (r < n) break;
+            }
+            int32_t i = (int32_t)(n_nodes - 1 - elem);
+            int32_t tmp = perm[i];
+            perm[i] = perm[r];
+            perm[r] = tmp;
+        }
+        int32_t cpu = pod_cpu[j], mem = pod_mem[j];
+        int32_t chosen = -1;
+        for (long s = 0; s < n_nodes; s++) {
+            int32_t idx = perm[s];
+            if (ready[idx] && free_cpu[idx] >= cpu && free_mem[idx] >= mem) {
+                free_cpu[idx] -= cpu;
+                free_mem[idx] -= mem;
+                chosen = idx;
+                break;
+            }
+        }
+        bind_out[j] = chosen;
+    }
+    state[0] = j; state[1] = 0; *pos_out = pos;
+    return 1;
+}
+"""
+
+_NATIVE_DIR = Path(__file__).resolve().parent / "_native"
+_native_lib = None
+_native_tried = False
+
+
+def _load_native():
+    global _native_lib, _native_tried
+    if _native_tried:
+        return _native_lib
+    _native_tried = True
+    if os.environ.get("REPRO_SHUFFLE_NO_NATIVE"):
+        return None
+    try:
+        tag = hashlib.sha256(_C_SRC.encode()).hexdigest()[:16]
+        so_path = _NATIVE_DIR / f"ka_shuffle_{tag}.so"
+        if not so_path.exists():
+            _NATIVE_DIR.mkdir(parents=True, exist_ok=True)
+            with tempfile.NamedTemporaryFile(
+                    "w", suffix=".c", dir=str(_NATIVE_DIR),
+                    delete=False) as f:
+                f.write(_C_SRC)
+                c_path = f.name
+            try:
+                subprocess.run(
+                    ["cc", "-O2", "-shared", "-fPIC", "-o",
+                     str(so_path) + ".tmp", c_path],
+                    check=True, capture_output=True, timeout=60)
+                os.replace(str(so_path) + ".tmp", so_path)
+            finally:
+                os.unlink(c_path)
+        lib = ctypes.CDLL(str(so_path))
+        draw = lib.ka_draw_apply
+        draw.restype = ctypes.c_long
+        draw.argtypes = [ctypes.c_char_p, ctypes.c_long, ctypes.c_long,
+                         ctypes.c_long, ctypes.c_long,
+                         ctypes.POINTER(ctypes.c_int32),
+                         ctypes.POINTER(ctypes.c_long)]
+        cycle = lib.ka_schedule_cycle
+        cycle.restype = ctypes.c_long
+        cycle.argtypes = [ctypes.c_char_p, ctypes.c_long, ctypes.c_long,
+                          ctypes.c_long, ctypes.POINTER(ctypes.c_int32),
+                          ctypes.POINTER(ctypes.c_int32),
+                          ctypes.POINTER(ctypes.c_int32),
+                          ctypes.c_char_p, ctypes.c_long,
+                          ctypes.POINTER(ctypes.c_int32),
+                          ctypes.POINTER(ctypes.c_int32),
+                          ctypes.POINTER(ctypes.c_int32),
+                          ctypes.POINTER(ctypes.c_long),
+                          ctypes.POINTER(ctypes.c_long)]
+        _native_lib = (draw, cycle)
+    except Exception:
+        _native_lib = None
+    return _native_lib
+
+
+class ExactShuffler:
+    """Drop-in ``shuffle`` with bit-identical draws from a bulk buffer."""
+
+    __slots__ = ("rng", "_raw", "_words", "_pos", "_native", "_native_cycle",
+                 "_posbox", "_posref", "_identity", "_perm_pool")
+
+    def __init__(self, rng: random.Random, native: Optional[bool] = None):
+        self.rng = rng
+        self._raw = b""
+        self._words: Optional[Sequence[int]] = ()
+        self._pos = _WORDS_PER_FETCH       # empty: first use refills
+        fns = _load_native() if native is not False else None
+        if native is True and fns is None:
+            raise RuntimeError("native shuffle backend unavailable")
+        self._native, self._native_cycle = fns if fns else (None, None)
+        self._posbox = ctypes.c_long(0)
+        self._posref = ctypes.byref(self._posbox)
+        self._identity: dict = {}          # length -> identity perm bytes
+        self._perm_pool: dict = {}         # length -> reusable perm buffer
+
+    @property
+    def backend(self) -> str:
+        return "native" if self._native is not None else "python"
+
+    def _refill(self):
+        raw = self.rng.getrandbits(32 * _WORDS_PER_FETCH)
+        self._raw = raw.to_bytes(4 * _WORDS_PER_FETCH, "little")
+        self._words = None                 # unpacked lazily (python path)
+        self._pos = 0
+
+    def _word_tuple(self) -> Sequence[int]:
+        if self._words is None:
+            self._words = _UNPACK(self._raw)
+        return self._words or ()
+
+    # ---- permutation API (both backends) ----------------------------------
+    def make_perm(self, n: int):
+        """An identity permutation draw_apply can mutate: int32 ctypes
+        array (native) or plain list (python)."""
+        if self._native is not None:
+            arr = (ctypes.c_int32 * n)(*range(n))
+            return arr
+        return list(range(n))
+
+    def reset_perm(self, perm, n: int):
+        if self._native is not None:
+            ident = self._identity.get(n)
+            if ident is None:
+                ident = self._identity[n] = struct.pack(f"<{n}i", *range(n))
+            ctypes.memmove(perm, ident, 4 * n)
+        else:
+            perm[:] = range(n)
+
+    def draw_apply(self, perm, n: int) -> None:
+        """Consume exactly the words ``rng.shuffle`` would for a list of
+        ``n`` and apply the identical Fisher-Yates swaps to ``perm``."""
+        if n < 2:
+            return
+        if self._native is not None:
+            done = 0
+            top = n - 1
+            while True:
+                if self._pos >= _WORDS_PER_FETCH:
+                    self._refill()
+                done = self._native(self._raw, _WORDS_PER_FETCH, self._pos,
+                                    n, done, perm, self._posref)
+                self._pos = self._posbox.value
+                if done >= top:
+                    return
+                self._refill()
+        else:
+            apply_swaps(perm, self.draw_swaps(n))
+
+    def schedule_cycle(self, perm, n_nodes: int, free_cpu, free_mem, ready,
+                       n_pods: int, pod_cpu, pod_mem, bind_out,
+                       state) -> None:
+        """Native scatter cycle: per pod, reshuffle ``perm`` (identical
+        draw stream) and first-fit scan against the free arrays,
+        charging them in place; ``bind_out[j]`` gets the node index or
+        -1. Callers must check :attr:`has_native_cycle`."""
+        state[0] = 0
+        state[1] = 0
+        while True:
+            if self._pos >= _WORDS_PER_FETCH:
+                self._refill()
+            done = self._native_cycle(
+                self._raw, _WORDS_PER_FETCH, self._pos, n_nodes, perm,
+                free_cpu, free_mem, ready, n_pods, pod_cpu, pod_mem,
+                bind_out, state, self._posref)
+            self._pos = self._posbox.value
+            if done:
+                return
+            self._refill()
+
+    @property
+    def has_native_cycle(self) -> bool:
+        return self._native_cycle is not None
+
+    # ---- python draw path --------------------------------------------------
+    def draw_swaps(self, length: int) -> List[int]:
+        """Consume exactly the words ``shuffle`` would for a list of
+        ``length``, returning the Fisher-Yates targets ``[r_{L-1} ..
+        r_1]`` without applying them."""
+        if length < 2:
+            return []
+        if length >= len(_SHIFT):
+            _ensure_shift(length)
+        shift_tab = _SHIFT
+        words = self._word_tuple()
+        pos = self._pos
+        end = len(words)
+        out = []
+        append = out.append
+        for i in range(length - 1, 0, -1):
+            n = i + 1
+            shift = shift_tab[n]
+            while True:
+                if pos >= end:
+                    self._refill()
+                    words = self._word_tuple()
+                    pos = 0
+                    end = len(words)
+                r = words[pos] >> shift
+                pos += 1
+                if r < n:
+                    break
+            append(r)
+        self._pos = pos
+        return out
+
+    def shuffle(self, x: list) -> None:
+        """Identical permutation to ``self.rng.shuffle(x)`` (same seed,
+        same consumed word stream), minus the per-draw call overhead."""
+        n = len(x)
+        if n < 2:
+            return
+        if self._native is not None:
+            perm = self._perm_pool.get(n)
+            if perm is None:
+                perm = self._perm_pool[n] = self.make_perm(n)
+            else:
+                self.reset_perm(perm, n)
+            self.draw_apply(perm, n)
+            x[:] = [x[i] for i in perm]
+        else:
+            apply_swaps(x, self.draw_swaps(n))
+
+
+def apply_swaps(x, swaps: Sequence[int]) -> None:
+    """Apply Fisher-Yates targets from :meth:`ExactShuffler.draw_swaps`
+    (equivalent to the shuffle those draws encode)."""
+    i = len(x) - 1
+    for r in swaps:
+        x[i], x[r] = x[r], x[i]
+        i -= 1

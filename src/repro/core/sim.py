@@ -12,13 +12,32 @@ One single-threaded event queue drives the whole control plane
 This "virtual time, real work" design is what lets a 1-core container
 model a 6-node cluster faithfully: concurrency exists in virtual time,
 while real payloads still run and produce real arrays.
+
+Scale notes: each scheduled event is a ``__slots__`` record, not a
+closure-capturing tuple; hot callers pass ``args=`` instead of
+allocating a lambda per event. ``events_processed`` counts executed
+events so benchmarks can report events/sec, and the ``note`` string is
+kept on the record — a ``max_events`` overflow names the next pending
+notes so runaway polling loops identify their culprit.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
+
+
+class Event:
+    """One scheduled callback: ``fn(*args)`` at a point in virtual time."""
+
+    __slots__ = ("fn", "args", "note", "daemon")
+
+    def __init__(self, fn: Callable, args: Tuple, note: str, daemon: bool):
+        self.fn = fn
+        self.args = args
+        self.note = note
+        self.daemon = daemon
 
 
 class Sim:
@@ -27,16 +46,21 @@ class Sim:
         self._q = []
         self._seq = itertools.count()
         self._live = 0      # non-daemon events outstanding
+        self.events_processed = 0
 
-    def at(self, t: float, fn: Callable[[], None], note: str = "",
-           daemon: bool = False):
+    def at(self, t: float, fn: Callable, note: str = "",
+           daemon: bool = False, args: Tuple = ()):
         if not daemon:
             self._live += 1
-        heapq.heappush(self._q, (max(t, self.t), next(self._seq), fn, daemon))
+        # heap tuple layout unchanged: (time, tie-break seq, record)
+        heapq.heappush(self._q, (t if t > self.t else self.t,
+                                 next(self._seq),
+                                 Event(fn, args, note, daemon)))
 
-    def after(self, dt: float, fn: Callable[[], None], note: str = "",
-              daemon: bool = False):
-        self.at(self.t + max(dt, 0.0), fn, note, daemon=daemon)
+    def after(self, dt: float, fn: Callable, note: str = "",
+              daemon: bool = False, args: Tuple = ()):
+        self.at(self.t + (dt if dt > 0.0 else 0.0), fn, note,
+                daemon=daemon, args=args)
 
     def now(self) -> float:
         return self.t
@@ -45,20 +69,27 @@ class Sim:
         """Process events until only daemon events remain (informer
         resyncs, metric samplers) or the horizon is reached."""
         n = 0
-        while self._q and self._live > 0:
-            t, _, fn, daemon = self._q[0]
+        q = self._q
+        while q and self._live > 0:
+            t, _, ev = q[0]
             if until is not None and t > until:
                 self.t = until
+                self.events_processed += n
                 return
-            heapq.heappop(self._q)
+            heapq.heappop(q)
             self.t = t
-            if not daemon:
+            if not ev.daemon:
                 self._live -= 1
-            fn()
+            ev.fn(*ev.args)
             n += 1
             if n >= max_events:
-                raise RuntimeError(f"sim exceeded {max_events} events — "
-                                   "likely a polling loop never terminated")
+                self.events_processed += n
+                notes = [e.note for _, _, e in heapq.nsmallest(8, q) if e.note]
+                raise RuntimeError(
+                    f"sim exceeded {max_events} events — likely a polling "
+                    f"loop never terminated; next pending notes: "
+                    f"{notes if notes else '(unnamed events)'}")
+        self.events_processed += n
 
     def idle(self) -> bool:
         return self._live == 0

@@ -1,0 +1,66 @@
+"""Streaming accumulators: flat-memory statistics for the stress tier.
+
+At 1000 workflows a run produces tens of thousands of pod records and
+resource samples; appending every observation to a Python list makes
+metrics memory grow with run length. ``StreamingStat`` keeps O(1)
+state — count / mean / min / max via Welford-style online updates —
+plus a fixed-size uniform reservoir so percentiles stay answerable
+without retaining the stream.
+
+The reservoir RNG is self-seeded and private: it never touches the
+cluster's scheduling RNG, so enabling streaming metrics cannot perturb
+the seeded disordered-scheduler sequence.
+"""
+from __future__ import annotations
+
+import random
+from typing import List
+
+
+class StreamingStat:
+    """Online count/mean/min/max + reservoir-sampled percentiles."""
+
+    __slots__ = ("count", "mean", "max", "min", "_m2",
+                 "_reservoir", "_capacity", "_rng")
+
+    def __init__(self, reservoir: int = 512, seed: int = 0xC0FFEE):
+        self.count = 0
+        self.mean = 0.0
+        self.max = float("-inf")
+        self.min = float("inf")
+        self._m2 = 0.0
+        self._reservoir: List[float] = []
+        self._capacity = reservoir
+        self._rng = random.Random(seed)
+
+    def add(self, x: float):
+        self.count += 1
+        delta = x - self.mean
+        self.mean += delta / self.count
+        self._m2 += delta * (x - self.mean)
+        if x > self.max:
+            self.max = x
+        if x < self.min:
+            self.min = x
+        if len(self._reservoir) < self._capacity:
+            self._reservoir.append(x)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < self._capacity:
+                self._reservoir[j] = x
+
+    @property
+    def variance(self) -> float:
+        return self._m2 / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Approximate q-th percentile (0-100) from the reservoir."""
+        if not self._reservoir:
+            return float("nan")
+        xs = sorted(self._reservoir)
+        idx = min(len(xs) - 1, max(0, round(q / 100.0 * (len(xs) - 1))))
+        return xs[idx]
+
+    def __repr__(self):
+        return (f"StreamingStat(count={self.count}, mean={self.mean:.4g}, "
+                f"min={self.min:.4g}, max={self.max:.4g})")
