@@ -1,5 +1,5 @@
-"""Scale-out stress tier: 1000 workflows / 100 nodes through the
-multi-tenant ControlPlane (ROADMAP's "1000-workflow stress scenario").
+"""Scale-out stress tiers: 1000-wf/100-node and 10k-wf/1000-node runs
+through the multi-tenant ControlPlane (ROADMAP scale track).
 
 Eight streams (two tenants per paper topology) drive the full
 KubeAdaptor stack — gateway, admission arbiter, informers, disordered
@@ -8,25 +8,33 @@ Each topology contributes a closed-loop "prod" tenant (concurrent
 arrivals, priority 10, fair-share weight 3) and an open-loop "batch"
 tenant (Poisson surge, the whole queue arriving in the first ~minute),
 so the admission backlog grows to thousands of pending requests while
-interactive load keeps flowing — the arrival-trace regime the ROADMAP
-targets. Per admission policy the run records real wall-clock, sim
-events/sec, peak pending depths (admission queue + unbound pods),
-per-tenant makespan, and peak RSS, then writes everything to
-``BENCH_scale.json`` (schema: benchmarks/README.md).
+interactive load keeps flowing. Per admission policy the run records
+real wall-clock, sim events/sec, *events per pod* (the 10k-tier
+bottleneck ISSUE 3 attacks), queue backend, usage-accounting mode,
+peak pending depths, per-tenant makespan, and peak RSS, then writes
+everything to ``BENCH_scale.json`` (``bench_scale/v2`` schema:
+benchmarks/README.md).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_scale \
-        [--workflows 1000] [--nodes 100] [--seed 42] \
-        [--policies fifo,priority,fair-share] [--out BENCH_scale.json] \
-        [--budget-s 0]
+        [--workflows 1000] [--nodes 100] [--tiers 1000x100,10000x1000] \
+        [--seed 42] [--policies fifo,priority,fair-share] \
+        [--queue calendar|heap] [--usage-mode event|sampled] \
+        [--lifecycle fast|chained] [--trace examples/trace_mixed.json] \
+        [--out BENCH_scale.json] [--budget-s 0] \
+        [--min-events-per-sec 0] [--max-events-per-pod 0]
 
-``--budget-s`` exits non-zero when total wall time exceeds the budget —
-the CI smoke job uses it to fail the build on event-core regressions.
-The module's ``run()`` (for ``benchmarks.run``) executes a reduced
-50-workflow/20-node smoke variant of the same scenario.
+``--budget-s`` exits 2 when total wall time exceeds the budget;
+``--min-events-per-sec`` / ``--max-events-per-pod`` exit 2 when any
+run breaches the floor/ceiling — the ``bench-scale-smoke`` CI job uses
+all three so event-core regressions fail the build. ``--trace``
+replays a recorded arrival trace (see ``arrival_trace/v1`` in
+benchmarks/README.md) instead of the synthetic streams. The module's
+``run()`` (for ``benchmarks.run``) executes a reduced
+50-workflow/20-node smoke variant of the synthetic scenario.
 
-The script runs unmodified against the pre-optimization core (counters
-it introduced are read via getattr) so speedups can be measured by
+The script still runs against the pre-optimization core (counters it
+introduced are read via getattr) so speedups can be measured by
 checking out two revisions and comparing ``wall_s``.
 """
 import argparse
@@ -45,10 +53,10 @@ from repro.core.runner import ControlPlane
 
 TOPOLOGIES = ("montage", "epigenomics", "cybershake", "ligo")
 POLICIES = ("fifo", "priority", "fair-share")
-SCHEMA = "bench_scale/v1"
+SCHEMA = "bench_scale/v2"
 
 
-def _plane_kwargs():
+def _plane_kwargs(usage_mode, queue, lifecycle):
     """Knobs that only the optimized core understands."""
     params = inspect.signature(ControlPlane.__init__).parameters
     kw = {}
@@ -56,13 +64,25 @@ def _plane_kwargs():
         kw["sample_mode"] = "streaming"
     if "retain_pod_log" in params:
         kw["retain_pod_log"] = False
+    if "usage_mode" in params:
+        kw["usage_mode"] = usage_mode
+    if "queue" in params and queue:
+        kw["queue"] = queue
+    if "lifecycle" in params and lifecycle:
+        kw["lifecycle"] = lifecycle
     return kw
 
 
-def build_plane(policy, n_workflows, n_nodes, seed):
+def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
+                queue=None, lifecycle=None, trace=None):
     plane = ControlPlane("kubeadaptor", admission_policy=policy,
                          cluster_cfg=cal.PaperCluster(n_nodes=n_nodes),
-                         seed=seed, **_plane_kwargs())
+                         seed=seed,
+                         **_plane_kwargs(usage_mode, queue, lifecycle))
+    if trace is not None:
+        plane.add_trace(trace.get("arrivals", []),
+                        tenants=trace.get("tenants"))
+        return plane
     n_streams = 2 * len(TOPOLOGIES)
     per, rem = divmod(n_workflows, n_streams)
     # enough closed-loop concurrency to keep ~666 pod slots/100 nodes busy
@@ -86,23 +106,39 @@ def build_plane(policy, n_workflows, n_nodes, seed):
     return plane
 
 
-def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0):
-    plane = build_plane(policy, n_workflows, n_nodes, seed)
+def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
+               usage_mode="event", queue=None, lifecycle=None, trace=None):
+    plane = build_plane(policy, n_workflows, n_nodes, seed,
+                        usage_mode=usage_mode, queue=queue,
+                        lifecycle=lifecycle, trace=trace)
     t0 = time.perf_counter()
     res = plane.run(horizon_s=horizon_s)
     wall = time.perf_counter() - t0
     m = res.metrics
-    completed = sum(1 for r in m.workflows.values() if r.ns_deleted > 0)
+    completed = sum(1 for r in m.workflows.values()
+                    if r.ns_deleted > 0 and not r.failed)
+    failed = sum(1 for r in m.workflows.values() if r.failed)
     events = getattr(res.sim, "events_processed", None)
+    pods = getattr(res.cluster, "pods_created", None)
+    # pre-optimization cores leave sim.t at the drain time; the current
+    # core parks it at the horizon and keeps the drain in last_event_t
+    makespan = getattr(res.sim, "last_event_t", res.sim.t)
     rec = {
         "policy": policy,
         "wall_s": round(wall, 3),
-        "sim_makespan_s": round(res.sim.t, 2),
+        "sim_makespan_s": round(makespan, 2),
         "events": events,
         "events_per_sec": (round(events / wall) if events else None),
+        "pods_created": pods,
+        "events_per_pod": (round(events / pods, 2)
+                           if events and pods else None),
+        "queue": getattr(res.sim, "queue_name", "heap"),
+        "usage_mode": getattr(m, "usage_mode", "sampled"),
+        "lifecycle": getattr(res.cluster, "lifecycle", "chained"),
         "peak_pending_admission": getattr(res.arbiter, "max_pending", None),
         "peak_pending_pods": getattr(res.cluster, "max_pending_pods", None),
         "completed_workflows": completed,
+        "failed_workflows": failed,
         "api_calls": res.cluster.api_calls,
         "admitted": res.arbiter.admitted,
         "deferrals": res.arbiter.deferrals,
@@ -112,14 +148,22 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0):
             t: round(s["makespan"], 2)
             for t, s in m.tenant_summary().items()},
     }
-    cpu_stat = getattr(m, "cpu_stat", None)
-    if cpu_stat is not None and cpu_stat.count:
-        cpu_a, _ = res.cluster.allocatable()
-        rec["cpu_usage"] = {"samples": cpu_stat.count,
-                            "mean_rate": round(cpu_stat.mean / cpu_a, 4),
-                            "peak_rate": round(cpu_stat.max / cpu_a, 4),
-                            "p95_rate": round(
-                                cpu_stat.percentile(95) / cpu_a, 4)}
+    summary = getattr(m, "usage_summary", None)
+    if summary is not None:
+        cpu = summary().get("cpu")
+        if cpu:
+            rec["cpu_usage"] = {
+                k: (round(v, 4) if isinstance(v, float) else v)
+                for k, v in cpu.items()}
+    else:                          # pre-optimization fallback
+        cpu_stat = getattr(m, "cpu_stat", None)
+        if cpu_stat is not None and cpu_stat.count:
+            cpu_a, _ = res.cluster.allocatable()
+            rec["cpu_usage"] = {"samples": cpu_stat.count,
+                                "mean_rate": round(cpu_stat.mean / cpu_a, 4),
+                                "peak_rate": round(cpu_stat.max / cpu_a, 4),
+                                "p95_rate": round(
+                                    cpu_stat.percentile(95) / cpu_a, 4)}
     exec_stat = getattr(res.cluster, "exec_stat", None)
     if exec_stat is not None and exec_stat.count:
         rec["pod_exec_s"] = {"count": exec_stat.count,
@@ -129,17 +173,24 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0):
     return rec
 
 
-def run_scenario(n_workflows, n_nodes, seed, policies):
-    runs = [run_policy(p, n_workflows, n_nodes, seed) for p in policies]
+def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
+                 queue=None, lifecycle=None, trace=None, trace_path=None):
+    runs = [run_policy(p, n_workflows, n_nodes, seed, usage_mode=usage_mode,
+                       queue=queue, lifecycle=lifecycle, trace=trace)
+            for p in policies]
+    scenario = {"workflows": n_workflows, "nodes": n_nodes,
+                "node_cpu_m": cal.PaperCluster.node_cpu_m,
+                "node_mem_mi": cal.PaperCluster.node_mem_mi,
+                "seed": seed, "topologies": list(TOPOLOGIES),
+                "streams": 2 * len(TOPOLOGIES)}
+    if trace is not None:
+        arrivals = trace.get("arrivals", [])
+        scenario.update({"trace": trace_path,
+                         "workflows": len(arrivals),
+                         "streams": 1, "topologies": sorted(
+                             {a["topology"] for a in arrivals})})
     return {
-        "schema": SCHEMA,
-        "scenario": {"workflows": n_workflows, "nodes": n_nodes,
-                     "node_cpu_m": cal.PaperCluster.node_cpu_m,
-                     "node_mem_mi": cal.PaperCluster.node_mem_mi,
-                     "seed": seed, "topologies": list(TOPOLOGIES),
-                     "streams": 2 * len(TOPOLOGIES)},
-        "host": {"python": platform.python_version(),
-                 "platform": platform.platform()},
+        "scenario": scenario,
         "runs": runs,
         "total_wall_s": round(sum(r["wall_s"] for r in runs), 3),
     }
@@ -147,9 +198,9 @@ def run_scenario(n_workflows, n_nodes, seed, policies):
 
 def run():
     """benchmarks.run entry: reduced smoke variant of the stress tier."""
-    report = run_scenario(50, 20, seed=42, policies=("fifo", "fair-share"))
+    tier = run_scenario(50, 20, seed=42, policies=("fifo", "fair-share"))
     rows = []
-    for r in report["runs"]:
+    for r in tier["runs"]:
         rows.append(row(
             f"scale_smoke_50wf_20n_{r['policy']}", r["wall_s"] * 1e6,
             f"makespan_s={r['sim_makespan_s']};"
@@ -159,31 +210,100 @@ def run():
     return rows
 
 
+def _parse_tiers(args):
+    if args.tiers:
+        out = []
+        for part in args.tiers.split(","):
+            wf, _, nodes = part.partition("x")
+            out.append((int(wf), int(nodes)))
+        return out
+    return [(args.workflows, args.nodes)]
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--workflows", type=int, default=1000)
     ap.add_argument("--nodes", type=int, default=100)
+    ap.add_argument("--tiers", default="",
+                    help="comma list of WFxNODES (e.g. 1000x100,10000x1000);"
+                         " overrides --workflows/--nodes")
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--policies", default=",".join(POLICIES))
+    ap.add_argument("--queue", default="",
+                    choices=("", "calendar", "heap"))
+    ap.add_argument("--usage-mode", default="event",
+                    choices=("event", "sampled"))
+    ap.add_argument("--lifecycle", default="",
+                    choices=("", "fast", "chained"))
+    ap.add_argument("--trace", default="",
+                    help="arrival_trace/v1 JSON to replay instead of the "
+                         "synthetic streams")
     ap.add_argument("--out", default="BENCH_scale.json")
     ap.add_argument("--budget-s", type=float, default=0.0,
                     help="fail (exit 2) if total wall time exceeds this")
+    ap.add_argument("--min-events-per-sec", type=float, default=0.0,
+                    help="fail (exit 2) if any run throughput drops below")
+    ap.add_argument("--max-events-per-pod", type=float, default=0.0,
+                    help="fail (exit 2) if any run exceeds this event cost")
     args = ap.parse_args()
 
     policies = [p for p in args.policies.split(",") if p]
-    report = run_scenario(args.workflows, args.nodes, args.seed, policies)
+    trace = None
+    if args.trace:
+        with open(args.trace) as f:
+            trace = json.load(f)
+    tiers = []
+    for n_wf, n_nodes in _parse_tiers(args):
+        tier = run_scenario(n_wf, n_nodes, args.seed, policies,
+                            usage_mode=args.usage_mode,
+                            queue=args.queue or None,
+                            lifecycle=args.lifecycle or None,
+                            trace=trace, trace_path=args.trace or None)
+        tiers.append(tier)
+        n_wf = tier["scenario"]["workflows"]
+        for r in tier["runs"]:
+            print(f"[{n_wf}wf/{n_nodes}n] {r['policy']:>11}: "
+                  f"wall={r['wall_s']:.1f}s "
+                  f"makespan={r['sim_makespan_s']:.0f}s "
+                  f"events/s={r['events_per_sec']} "
+                  f"events/pod={r['events_per_pod']} "
+                  f"completed={r['completed_workflows']}", flush=True)
+        if trace is not None:
+            break                     # a trace defines its own workload
+
+    report = {
+        "schema": SCHEMA,
+        "host": {"python": platform.python_version(),
+                 "platform": platform.platform()},
+        "tiers": tiers,
+        "total_wall_s": round(sum(t["total_wall_s"] for t in tiers), 3),
+    }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
-    for r in report["runs"]:
-        print(f"{r['policy']:>11}: wall={r['wall_s']:.1f}s "
-              f"makespan={r['sim_makespan_s']:.0f}s "
-              f"events/s={r['events_per_sec']} "
-              f"completed={r['completed_workflows']}", flush=True)
     print(f"total wall: {report['total_wall_s']:.1f}s -> {args.out}")
+
+    failures = []
     if args.budget_s and report["total_wall_s"] > args.budget_s:
-        print(f"BUDGET EXCEEDED: {report['total_wall_s']:.1f}s "
-              f"> {args.budget_s:.1f}s", file=sys.stderr)
+        failures.append(f"BUDGET EXCEEDED: {report['total_wall_s']:.1f}s "
+                        f"> {args.budget_s:.1f}s")
+    for tier in tiers:
+        for r in tier["runs"]:
+            label = (f"{tier['scenario']['workflows']}wf/"
+                     f"{tier['scenario']['nodes']}n {r['policy']}")
+            if (args.min_events_per_sec and r["events_per_sec"]
+                    and r["events_per_sec"] < args.min_events_per_sec):
+                failures.append(
+                    f"THROUGHPUT FLOOR: {label} {r['events_per_sec']}/s "
+                    f"< {args.min_events_per_sec:.0f}/s")
+            if (args.max_events_per_pod and r["events_per_pod"]
+                    and r["events_per_pod"] > args.max_events_per_pod):
+                failures.append(
+                    f"EVENT-COST CEILING: {label} {r['events_per_pod']} "
+                    f"events/pod > {args.max_events_per_pod:.1f}")
+    if failures:
+        for msg in failures:
+            print(msg, file=sys.stderr)
         raise SystemExit(2)
 
 

@@ -45,6 +45,11 @@ class ClusterParams:
     argo_workflow_init: float = 2.0    # CRD submission + controller pickup
     # fault tolerance / stragglers
     max_retries: int = 3
+    on_retry_exhausted: str = "raise"   # "raise": RuntimeError tears down the
+                                        # whole run (historical behaviour);
+                                        # "fail-workflow": mark the workflow
+                                        # failed, clean up its namespace, let
+                                        # every other workflow finish
     create_retry_backoff: float = 0.25  # wait before re-creating after
                                         # AlreadyExists delete+retry (§4.5);
                                         # avoids hot-looping the apiserver

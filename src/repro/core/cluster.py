@@ -28,9 +28,45 @@ Scale-out notes (1000 workflows / 100 nodes — see ISSUE 2):
   * watch fan-out batches same-instant events per kind into one sim
     event, with one object snapshot per notification, delivered at the
     same virtual times as the per-event path it replaces.
+
+Pod-lifecycle fast path (10k workflows / 1000 nodes — see ISSUE 3):
+the create→bind→running→succeeded→delete chain used to cost one sim
+event per pod per hop.  Every hop's *due time* is fixed by a constant
+latency, so same-instant hops coalesce into compound batch events that
+replay the per-pod callbacks in the exact order the chained events
+would have executed:
+
+  * pod creations scheduled at one instant share one apiserver event
+    (``_flush_creates``), and deletions share a two-stage batch
+    (lookup at +api_latency, removal at +pod_delete_latency);
+  * all pods bound in one scheduler cycle start in ONE compound event
+    (``_start_batch``) that applies the running transitions, emits the
+    watch notifications, and schedules one ``_finish_batch`` per
+    distinct completion instant — the timeline of every bound pod is
+    determined at bind time (virtual payloads), so the whole
+    remaining lifecycle is scheduled in a single pass.
+
+Exactness argument: consecutive hops of one instant draw consecutive
+sim sequence numbers (nothing else can schedule between them), so a
+batch that replays them back-to-back preserves every same-instant
+ordering; hops whose sequence numbers shift (e.g. a finish group
+scheduled after its siblings' notifications) only target instants
+reachable from distinct constant-latency sums, where no foreign event
+can sit between the old and new position.  ``lifecycle="chained"``
+(or ``REPRO_LIFECYCLE=chained``) restores the one-event-per-hop path;
+tests/test_event_core.py pins both paths to identical binding
+sequences and metrics, and tests/test_scale_core.py's pinned hashes
+run on the fast path.
+
+Usage accounting: the cluster maintains exact in-use cpu/mem totals
+(``cpu_in_use``/``mem_in_use``, updated at bind/release) so ``used()``
+is O(1), and fires ``on_usage_change`` after every change — the
+event-driven usage accumulator in core/metrics.py hangs off this hook
+instead of polling a 0.5 s sampler.
 """
 from __future__ import annotations
 
+import os
 import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -120,9 +156,17 @@ class Cluster:
     def __init__(self, sim: Sim, params: cal.ClusterParams = cal.DEFAULT_PARAMS,
                  cluster_cfg: cal.PaperCluster = cal.DEFAULT_CLUSTER,
                  payload_mode: str = "virtual", seed: int = 0,
-                 retain_pod_log: bool = True):
+                 retain_pod_log: bool = True,
+                 lifecycle: Optional[str] = None):
         self.sim = sim
         self.p = params
+        if lifecycle is None:
+            lifecycle = os.environ.get("REPRO_LIFECYCLE", "fast")
+        if lifecycle not in ("fast", "chained"):
+            raise ValueError(f"unknown lifecycle {lifecycle!r}; "
+                             f"expected 'fast' or 'chained'")
+        self.lifecycle = lifecycle
+        self._fast = lifecycle == "fast"
         self.payload_mode = payload_mode
         self.rng = random.Random(seed)
         # sole consumer of self.rng (see shuffle.py buffering contract)
@@ -137,10 +181,19 @@ class Cluster:
         # kind -> (delivery time, events) for the open same-instant batch
         self._watch_buf: Dict[str, Tuple[float, List[WatchEvent]]] = {}
         self._sched_scheduled = False
+        # fast-lifecycle coalescing buffers: (due instant, open batch)
+        self._create_buf: Optional[Tuple[float, List]] = None
+        self._del_buf: Optional[Tuple[float, List]] = None
+        self._start_buf: Optional[Tuple[float, List[PodObj]]] = None
         self.api_calls = 0                   # apiserver pressure counter
+        self.pods_created = 0                # pods accepted by the apiserver
         self.retain_pod_log = retain_pod_log
         self.pod_log: List[PodObj] = []      # every pod ever (metrics)
         self.exec_stat = StreamingStat()     # pod create->delete (Succeeded)
+        # exact in-use totals (mirror of the node scan) + change hook
+        self.cpu_in_use = 0
+        self.mem_in_use = 0
+        self.on_usage_change: Optional[Callable[[Optional[str]], None]] = None
         # scheduler indexes: unbound Pending pods in creation order (the
         # same visit order as the old full-pod scan), reusable node array
         self._pending_pods: Dict[Tuple[str, str], PodObj] = {}
@@ -150,11 +203,25 @@ class Cluster:
         if self._shuffler.has_native_cycle:
             import ctypes
             n = len(self._node_seq)
+            # free-capacity mirrors of the node objects, maintained
+            # incrementally at bind/release/fail/restore (absolute
+            # writes, so the in-place charging the native cycle already
+            # did is simply re-asserted) — the per-cycle O(nodes)
+            # refill dominated the 1000-node scheduler profile
             self._c_free_cpu = (ctypes.c_int32 * n)()
             self._c_free_mem = (ctypes.c_int32 * n)()
+            self._c_ready = bytearray(n)
+            self._node_idx: Dict[str, int] = {}
+            for i, node in enumerate(self._node_seq):
+                self._c_free_cpu[i] = node.cpu_alloc - node.cpu_used
+                self._c_free_mem[i] = node.mem_alloc - node.mem_used
+                self._c_ready[i] = node.ready
+                self._node_idx[node.name] = i
             self._c_state = (ctypes.c_long * 2)()
             self._c_pod_cap = 0
             self._c_pod_cpu = self._c_pod_mem = self._c_bind = None
+        else:
+            self._c_free_cpu = None
         self.max_pending_pods = 0            # peak unbound-pod queue depth
         self.sched_cycles = 0
         # bound (resource-holding) cpu per tenant label, kept current at
@@ -254,47 +321,104 @@ class Cluster:
     def create_pod(self, pod: PodObj, cb: Optional[Callable] = None,
                    error_cb: Optional[Callable] = None):
         self.api_calls += 1
+        if not self._fast:
+            self.sim.after(self.p.api_latency, self._create_now,
+                           args=(pod, cb, error_cb))
+            return
+        # same-instant creations share one apiserver round-trip event
+        due = self.sim.t + self.p.api_latency
+        buf = self._create_buf
+        if buf is not None and buf[0] == due:
+            buf[1].append((pod, cb, error_cb))
+            return
+        batch = [(pod, cb, error_cb)]
+        self._create_buf = (due, batch)
+        self.sim.at(due, self._flush_creates, note="pod-create",
+                    args=(due, batch))
 
-        def do():
-            key = (pod.namespace, pod.name)
-            if key in self.pods:
-                if error_cb:
-                    error_cb("AlreadyExists", self.pods[key])
-                return
-            if pod.namespace not in self.namespaces:
-                if error_cb:
-                    error_cb("NamespaceNotFound", pod)
-                return
-            pod.created = self.sim.now()
-            pod.phase = PENDING
-            self.pods[key] = pod
-            self._pods_by_ns.setdefault(pod.namespace, {})[key] = pod
-            self._pending_pods[key] = pod
-            if len(self._pending_pods) > self.max_pending_pods:
-                self.max_pending_pods = len(self._pending_pods)
-            if self.retain_pod_log:
-                self.pod_log.append(pod)
-            self._notify("pod", ADDED, pod)
-            self._kick_scheduler()
-            if cb:
-                cb(pod)
+    def _flush_creates(self, due: float, batch: List):
+        buf = self._create_buf
+        if buf is not None and buf[0] == due:
+            self._create_buf = None
+        for pod, cb, error_cb in batch:
+            self._create_now(pod, cb, error_cb)
 
-        self.sim.after(self.p.api_latency, do)
+    def _create_now(self, pod: PodObj, cb: Optional[Callable],
+                    error_cb: Optional[Callable]):
+        key = (pod.namespace, pod.name)
+        if key in self.pods:
+            if error_cb:
+                error_cb("AlreadyExists", self.pods[key])
+            return
+        if pod.namespace not in self.namespaces:
+            if error_cb:
+                error_cb("NamespaceNotFound", pod)
+            return
+        pod.created = self.sim.now()
+        pod.phase = PENDING
+        self.pods[key] = pod
+        self.pods_created += 1
+        self._pods_by_ns.setdefault(pod.namespace, {})[key] = pod
+        self._pending_pods[key] = pod
+        if len(self._pending_pods) > self.max_pending_pods:
+            self.max_pending_pods = len(self._pending_pods)
+        if self.retain_pod_log:
+            self.pod_log.append(pod)
+        self._notify("pod", ADDED, pod)
+        self._kick_scheduler()
+        if cb:
+            cb(pod)
 
     def delete_pod(self, namespace: str, name: str,
                    cb: Optional[Callable] = None):
         self.api_calls += 1
+        if not self._fast:
+            self.sim.after(self.p.api_latency, self._delete_lookup,
+                           args=(namespace, name, cb))
+            return
+        # same-instant deletions share the apiserver lookup event and
+        # one removal event pod_delete_latency later
+        due = self.sim.t + self.p.api_latency
+        buf = self._del_buf
+        if buf is not None and buf[0] == due:
+            buf[1].append((namespace, name, cb))
+            return
+        batch = [(namespace, name, cb)]
+        self._del_buf = (due, batch)
+        self.sim.at(due, self._flush_delete_lookups, note="pod-delete",
+                    args=(due, batch))
 
-        def do():
+    def _delete_lookup(self, namespace: str, name: str,
+                       cb: Optional[Callable]):
+        pod = self.pods.get((namespace, name))
+        if pod is None:
+            if cb:
+                cb(None)
+            return
+        self.sim.after(self.p.pod_delete_latency, self._remove_batch,
+                       args=([(pod, cb)],))
+
+    def _flush_delete_lookups(self, due: float, batch: List):
+        buf = self._del_buf
+        if buf is not None and buf[0] == due:
+            self._del_buf = None
+        removals = []
+        for namespace, name, cb in batch:
             pod = self.pods.get((namespace, name))
             if pod is None:
                 if cb:
                     cb(None)
-                return
-            self.sim.after(self.p.pod_delete_latency,
-                           lambda: (self._remove_pod(pod), cb(pod) if cb else None))
+            else:
+                removals.append((pod, cb))
+        if removals:
+            self.sim.after(self.p.pod_delete_latency, self._remove_batch,
+                           note="pod-remove", args=(removals,))
 
-        self.sim.after(self.p.api_latency, do)
+    def _remove_batch(self, removals: List):
+        for pod, cb in removals:
+            self._remove_pod(pod)
+            if cb:
+                cb(pod)
 
     def _remove_pod(self, pod: PodObj):
         key = (pod.namespace, pod.name)
@@ -321,8 +445,16 @@ class Cluster:
             n.cpu_used -= pod.cpu_m
             n.mem_used -= pod.mem_mi
             pod._holding = False
-            self.tenant_holding_cpu[pod.labels.get("tenant", "default")] -= \
-                pod.cpu_m
+            if self._c_free_cpu is not None:
+                i = self._node_idx[n.name]
+                self._c_free_cpu[i] = n.cpu_alloc - n.cpu_used
+                self._c_free_mem[i] = n.mem_alloc - n.mem_used
+            self.cpu_in_use -= pod.cpu_m
+            self.mem_in_use -= pod.mem_mi
+            tenant = pod.labels.get("tenant", "default")
+            self.tenant_holding_cpu[tenant] -= pod.cpu_m
+            if self.on_usage_change is not None:
+                self.on_usage_change(tenant)
 
     # ---- the disordered scheduler ---------------------------------------
     def _kick_scheduler(self):
@@ -362,18 +494,14 @@ class Cluster:
             self._c_pod_mem = (ctypes.c_int32 * cap)()
             self._c_bind = (ctypes.c_int32 * cap)()
             self._c_pod_cap = cap
-        free_cpu, free_mem = self._c_free_cpu, self._c_free_mem
-        ready = bytearray(n_nodes)
-        for i, node in enumerate(node_seq):
-            free_cpu[i] = node.cpu_alloc - node.cpu_used
-            free_mem[i] = node.mem_alloc - node.mem_used
-            ready[i] = node.ready
         pod_cpu, pod_mem = self._c_pod_cpu, self._c_pod_mem
         for j, pod in enumerate(pending):
             pod_cpu[j] = pod.cpu_m
             pod_mem[j] = pod.mem_mi
-        self._shuffler.schedule_cycle(perm, n_nodes, free_cpu, free_mem,
-                                      bytes(ready), n_pods, pod_cpu, pod_mem,
+        # free/ready mirrors are already current (see __init__)
+        self._shuffler.schedule_cycle(perm, n_nodes, self._c_free_cpu,
+                                      self._c_free_mem, bytes(self._c_ready),
+                                      n_pods, pod_cpu, pod_mem,
                                       self._c_bind, self._c_state)
         bind = self._c_bind
         for j, pod in enumerate(pending):
@@ -414,20 +542,44 @@ class Cluster:
         node.cpu_used += pod.cpu_m
         node.mem_used += pod.mem_mi
         pod._holding = True
+        if self._c_free_cpu is not None:
+            i = self._node_idx[node.name]
+            self._c_free_cpu[i] = node.cpu_alloc - node.cpu_used
+            self._c_free_mem[i] = node.mem_alloc - node.mem_used
+        self.cpu_in_use += pod.cpu_m
+        self.mem_in_use += pod.mem_mi
         tenant = pod.labels.get("tenant", "default")
         self.tenant_holding_cpu[tenant] = \
             self.tenant_holding_cpu.get(tenant, 0) + pod.cpu_m
+        if self.on_usage_change is not None:
+            self.on_usage_change(tenant)
         self._pending_pods.pop((pod.namespace, pod.name), None)
         start_lat = self.p.pod_start_latency
         if pod.volume:
             start_lat += self.p.pvc_mount_latency
-        self.sim.after(start_lat, self._start, args=(pod,))
+        if not self._fast:
+            self.sim.after(start_lat, self._start, args=(pod,))
+            return
+        # compound timeline: every pod bound in this scheduler cycle
+        # shares one start event; the rest of its lifecycle (finish
+        # instants, watch notifications) is laid out when it fires
+        due = self.sim.t + start_lat
+        buf = self._start_buf
+        if buf is not None and buf[0] == due:
+            buf[1].append(pod)
+            return
+        batch = [pod]
+        self._start_buf = (due, batch)
+        self.sim.at(due, self._start_batch, note="pod-start",
+                    args=(due, batch))
 
-    def _start(self, pod: PodObj):
+    def _start_one(self, pod: PodObj) -> float:
+        """Apply the Pending→Running transition; returns the completion
+        due time, or -1.0 when the pod can no longer start."""
         if self.pods.get((pod.namespace, pod.name)) is not pod:
-            return                                   # deleted while starting
+            return -1.0                              # deleted while starting
         if not self.nodes[pod.node].ready:
-            return                                   # node died mid-start
+            return -1.0                              # node died mid-start
         pod.phase = RUNNING
         pod.started = self.sim.now()
         self._notify("pod", MODIFIED, pod)
@@ -437,7 +589,37 @@ class Cluster:
         elif pod.payload is not None:
             pod.payload()                            # run, but virtual timing
         dur *= self.nodes[pod.node].slow_factor
-        self.sim.after(dur, self._finish, args=(pod, SUCCEEDED))
+        return self.sim.t + (dur if dur > 0.0 else 0.0)
+
+    def _start(self, pod: PodObj):
+        fdue = self._start_one(pod)
+        if fdue >= 0.0:
+            self.sim.at(fdue, self._finish, args=(pod, SUCCEEDED))
+
+    def _start_batch(self, due: float, pods: List[PodObj]):
+        buf = self._start_buf
+        if buf is not None and buf[0] == due:
+            self._start_buf = None
+        # transition every pod first (their RUNNING notifications share
+        # one watch batch, in bind order — exactly the chained order),
+        # then schedule one finish event per distinct completion instant
+        groups: Dict[float, List[PodObj]] = {}
+        for pod in pods:
+            fdue = self._start_one(pod)
+            if fdue < 0.0:
+                continue
+            g = groups.get(fdue)
+            if g is None:
+                groups[fdue] = [pod]
+            else:
+                g.append(pod)
+        for fdue, group in groups.items():
+            self.sim.at(fdue, self._finish_batch, note="pod-finish",
+                        args=(group,))
+
+    def _finish_batch(self, group: List[PodObj]):
+        for pod in group:
+            self._finish(pod, SUCCEEDED)
 
     def _finish(self, pod: PodObj, phase: str):
         if self.pods.get((pod.namespace, pod.name)) is not pod:
@@ -458,6 +640,8 @@ class Cluster:
     def fail_node(self, name: str):
         node = self.nodes[name]
         node.ready = False
+        if self._c_free_cpu is not None:
+            self._c_ready[self._node_idx[name]] = 0
         self._notify("node", MODIFIED, node)
         for pod in list(self.pods.values()):
             if pod.node == name and pod.phase in (PENDING, RUNNING):
@@ -469,7 +653,17 @@ class Cluster:
     def restore_node(self, name: str):
         node = self.nodes[name]
         node.ready = True
+        if node.cpu_used or node.mem_used:   # normally zero: failure released
+            self.cpu_in_use -= node.cpu_used
+            self.mem_in_use -= node.mem_used
+            if self.on_usage_change is not None:
+                self.on_usage_change(None)
         node.cpu_used = node.mem_used = 0
+        if self._c_free_cpu is not None:
+            i = self._node_idx[name]
+            self._c_free_cpu[i] = node.cpu_alloc
+            self._c_free_mem[i] = node.mem_alloc
+            self._c_ready[i] = 1
         self._notify("node", MODIFIED, node)
         self._kick_scheduler()
 
@@ -500,6 +694,12 @@ class Cluster:
         return cpu, mem
 
     def used(self) -> Tuple[int, int]:
+        # exact running totals, O(1); equals the node scan at all times
+        # (pinned by tests/test_event_core.py)
+        return self.cpu_in_use, self.mem_in_use
+
+    def used_scan(self) -> Tuple[int, int]:
+        """Reference node scan; equals ``used()`` at every instant."""
         cpu = sum(n.cpu_used for n in self.nodes.values())
         mem = sum(n.mem_used for n in self.nodes.values())
         return cpu, mem

@@ -280,6 +280,12 @@ class KubeAdaptorEngine:
         self.metrics.wf_record(ws.wf).retries += 1
         task = ws.wf.tasks[tid]
         if n > self.p.max_retries:
+            if self.p.on_retry_exhausted == "fail-workflow":
+                # quarantine the blast radius to this workflow: the other
+                # tenants' runs must not die with it (§4.5 at 10k scale)
+                self._fail_workflow(
+                    ws, f"{tid} exceeded {self.p.max_retries} retries")
+                return
             raise RuntimeError(f"{ws.ns}/{tid} exceeded retries")
         # remove the failed pod, then request generation again (§4.5)
         def recreate(_p):
@@ -308,17 +314,30 @@ class KubeAdaptorEngine:
 
         self.sim.after(wait, check)
 
+    def _fail_workflow(self, ws: WorkflowState, reason: str):
+        """Terminal failure of ONE workflow: record it, then the same
+        teardown as success — the other tenants' runs must not die
+        with it."""
+        self.metrics.note_failed(ws.wf, reason)
+        self._teardown(ws, "workflow-failed")
+
     # ------------------------------------------------------------------ #
     # completion
     # ------------------------------------------------------------------ #
     def _workflow_complete(self, ws: WorkflowState):
+        self._teardown(ws, "workflow-complete")
+
+    def _teardown(self, ws: WorkflowState, event: str):
+        """Release admission state, destroy the namespace (cascading
+        pods/PVCs), and hand the completion back to the gateway so
+        closed-loop streams keep flowing."""
         ws.done = True
         self.arbiter.forget_namespace(ws.ns)
 
         def ns_gone(_ns):
             self.metrics.note_ns_deleted(ws.wf)
             self.volumes.release(ws.ns)
-            self.events.emit("workflow-complete", ws.wf)
+            self.events.emit(event, ws.wf)
             if self.on_workflow_done:
                 self.on_workflow_done(ws.wf)
 

@@ -69,6 +69,11 @@ class Informer:
         self.nonterminal_cpu = 0
         self.nonterminal_mem = 0
         self.nonterminal_cpu_by_tenant: Dict[str, int] = {}
+        # keys written (set or pop) since the arbiter last reconciled
+        # its reservation ledger — lets the sync touch only keys whose
+        # droppability can have changed instead of scanning the ledger
+        # (single consumer: AdmissionArbiter._sync_reservations clears)
+        self.touched: List[Any] = []
         self._list_fn = {
             "pod": cluster.list_pods,
             "node": cluster.list_nodes,
@@ -83,6 +88,7 @@ class Informer:
     def _cache_set(self, k: Any, obj: Any):
         self.generation += 1
         if self._track_pods:
+            self.touched.append(k)
             old = self.cache.get(k)
             if old is not None and old.phase in _NON_TERMINAL:
                 self._untrack(old)
@@ -94,8 +100,10 @@ class Informer:
         old = self.cache.pop(k, None)
         if old is not None:
             self.generation += 1
-            if self._track_pods and old.phase in _NON_TERMINAL:
-                self._untrack(old)
+            if self._track_pods:
+                self.touched.append(k)
+                if old.phase in _NON_TERMINAL:
+                    self._untrack(old)
         return old
 
     def _track(self, pod: Any):

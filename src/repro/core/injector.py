@@ -19,6 +19,10 @@ Two front-ends share that machinery:
     poisson     seeded exponential inter-arrival times at ``rate``/s,
                 ``burst`` instances per arrival, independent of
                 completions (open-loop traffic)
+    trace       exact replay of recorded ``(t, tenant, topology)``
+                arrival records (``load_trace``) — open-loop like
+                poisson, but driven by a real cluster log instead of a
+                synthetic process
 
   Streams are drained from ``collections.deque`` (O(1) pops); the
   gateway allocates globally unique instance ids per workflow name so
@@ -36,7 +40,7 @@ from repro.core.sim import Sim
 
 GRPC_LATENCY = 0.02
 
-ARRIVAL_MODES = ("serial", "concurrent", "poisson")
+ARRIVAL_MODES = ("serial", "concurrent", "poisson", "trace")
 
 
 class WorkflowInjector:
@@ -164,6 +168,34 @@ class WorkflowGateway:
         if self._started:
             self._kick(stream)
 
+    def load_trace(self, records, make: Callable[[str], Workflow]):
+        """Replay an arrival trace exactly: each record —
+        ``{"t": seconds, "tenant": name, "topology": key}`` — submits
+        one instance of ``make(topology)`` (re-tenanted) at its
+        recorded virtual time.  Ties keep file order.  Returns the
+        trace stream (its queue holds ``(t, workflow)`` pairs)."""
+        arrivals = sorted(
+            ((float(rec["t"]), i, rec) for i, rec in enumerate(records)),
+            key=lambda a: (a[0], a[1]))
+        q: Deque = deque()
+        for t, _i, rec in arrivals:
+            if t < 0:
+                raise ValueError(f"trace arrival at negative t={t}")
+            base = make(rec["topology"])
+            tenant = rec.get("tenant", "default")
+            if base.tenant != tenant:
+                base = base.with_tenant(tenant)
+            nxt = self._instances.get(base.name, 0)
+            self._instances[base.name] = nxt + 1
+            q.append((t, base.with_instance(nxt)))
+        first = q[0][1] if q else Workflow("trace-empty", {})
+        stream = _Stream(StreamSpec(workflow=first, repeats=0,
+                                    arrival="trace"), q)
+        self.streams.append(stream)
+        if self._started:
+            self._kick(stream)
+        return stream
+
     # -- sending module ----------------------------------------------------
     def start(self):
         if self._started:
@@ -183,6 +215,8 @@ class WorkflowGateway:
                 self._send_one(stream)
         elif mode == "poisson":
             self._schedule_arrival(stream)
+        elif mode == "trace":
+            self._schedule_trace(stream)
 
     def _send_one(self, stream: _Stream):
         if not stream.queue:
@@ -207,6 +241,26 @@ class WorkflowGateway:
             self._schedule_arrival(stream)
 
         self.sim.after(gap, arrive)
+
+    def _schedule_trace(self, stream: _Stream):
+        if not stream.queue:
+            self._check_drained()
+            return
+        due = stream.queue[0][0]
+
+        def arrive():
+            # every record due at this instant arrives in file order
+            while stream.queue and stream.queue[0][0] <= self.sim.t:
+                _t, wf = stream.queue.popleft()
+                stream.in_flight += 1
+                stream.sent += 1
+                self.sent += 1
+                self._by_ns[wf.namespace()] = stream
+                self.sim.after(self.grpc_latency,
+                               lambda w=wf: self.send_to(w))
+            self._schedule_trace(stream)
+
+        self.sim.at(due, arrive, note="trace-arrival")
 
     # -- next-workflow trigger (completion routing) -------------------------
     def workflow_done(self, wf: Workflow):

@@ -23,6 +23,18 @@ unbounded per-sample lists with flat-memory accumulators
 percentiles) — at 1000 workflows the sampler would otherwise grow
 without bound. Paper-scale runs keep the default ``"full"`` mode, so
 ``samples``/``usage_rate_over`` behave exactly as before.
+
+Event-driven usage accounting (ISSUE 3): the 0.5 s sampler is a
+polling daemon — 1801 sim events per 900 s run, scaling with sim time
+rather than load, and only ever an approximation of the underlying
+step function.  ``usage_mode="event"`` drops the daemon entirely: the
+cluster fires ``on_usage_change`` at every bind/release and the
+collector keeps exact ``StepAccumulator``s (cluster cpu/mem + per
+tenant), from which mean/peak/p95 rates are derived in closed form via
+``usage_summary()``.  The default stays ``"sampled"`` (both
+``sample_mode`` flavours unchanged); tests pin that the two modes
+agree on mean/peak and that removing the daemon moves no scheduling
+decision.
 """
 from __future__ import annotations
 
@@ -33,7 +45,7 @@ from repro.core import calibration as cal
 from repro.core.cluster import Cluster, SUCCEEDED
 from repro.core.dag import Workflow
 from repro.core.sim import Sim
-from repro.core.stats import StreamingStat
+from repro.core.stats import StepAccumulator, StreamingStat
 
 
 @dataclass
@@ -48,6 +60,8 @@ class WorkflowRecord:
     starts: List[Tuple[float, str]] = field(default_factory=list)   # (t, task)
     finishes: Dict[str, float] = field(default_factory=dict)
     retries: int = 0
+    failed: bool = False           # retry budget exhausted (fail-workflow)
+    failure: str = ""
 
     @property
     def lifecycle(self) -> float:
@@ -66,13 +80,17 @@ class WorkflowRecord:
 class MetricsCollector:
     def __init__(self, sim: Sim, cluster: Cluster,
                  params: cal.ClusterParams = cal.DEFAULT_PARAMS,
-                 sample_mode: str = "full"):
+                 sample_mode: str = "full",
+                 usage_mode: str = "sampled"):
         if sample_mode not in ("full", "streaming"):
             raise ValueError(f"unknown sample_mode {sample_mode!r}")
+        if usage_mode not in ("sampled", "event"):
+            raise ValueError(f"unknown usage_mode {usage_mode!r}")
         self.sim = sim
         self.cluster = cluster
         self.p = params
         self.sample_mode = sample_mode
+        self.usage_mode = usage_mode
         self.workflows: Dict[Tuple[str, int], WorkflowRecord] = {}
         self.samples: List[Tuple[float, int, int]] = []   # (t, cpu_m, mem_mi)
         self.tenant_samples: List[Tuple[float, Dict[str, int]]] = []
@@ -81,6 +99,31 @@ class MetricsCollector:
         self.tenant_cpu_stats: Dict[str, StreamingStat] = {}
         self.admission_deferrals: Dict[str, int] = {}
         self._sampling = False
+        # event-driven accounting: exact step accumulators fed by the
+        # cluster's bind/release hook — no polling daemon
+        self.cpu_acc: Optional[StepAccumulator] = None
+        self.mem_acc: Optional[StepAccumulator] = None
+        self.tenant_cpu_accs: Dict[str, StepAccumulator] = {}
+        self._usage_closed = False
+        if usage_mode == "event":
+            self.cpu_acc = StepAccumulator(t0=sim.now())
+            self.mem_acc = StepAccumulator(t0=sim.now())
+            cluster.on_usage_change = self._usage_changed
+
+    def _usage_changed(self, tenant: Optional[str]):
+        t = self.sim.t
+        self.cpu_acc.set(t, self.cluster.cpu_in_use)
+        self.mem_acc.set(t, self.cluster.mem_in_use)
+        if tenant is not None:
+            acc = self.tenant_cpu_accs.get(tenant)
+            if acc is None:
+                # window-align with the cluster accumulators (t0 at
+                # collector start): tenant means are over the whole run,
+                # leading idle time included — unlike sampled-mode
+                # tenant stats, which are means over active samples only
+                acc = self.tenant_cpu_accs[tenant] = \
+                    StepAccumulator(t0=self.cpu_acc.start_t)
+            acc.set(t, self.cluster.tenant_holding_cpu.get(tenant, 0))
 
     # ---- lifecycle bookkeeping (engines call these) ---------------------
     def wf_record(self, wf: Workflow) -> WorkflowRecord:
@@ -102,6 +145,11 @@ class MetricsCollector:
         self.admission_deferrals[tenant] = \
             self.admission_deferrals.get(tenant, 0) + 1
 
+    def note_failed(self, wf: Workflow, reason: str = ""):
+        rec = self.wf_record(wf)
+        rec.failed = True
+        rec.failure = reason
+
     def note_ns_created(self, wf: Workflow):
         self.wf_record(wf).ns_created = self.sim.now()
 
@@ -119,6 +167,8 @@ class MetricsCollector:
         if self._sampling:
             return
         self._sampling = True
+        if self.usage_mode == "event":
+            return                 # accumulators run from construction
 
         streaming = self.sample_mode == "streaming"
 
@@ -147,6 +197,26 @@ class MetricsCollector:
 
     def stop_sampling(self):
         self._sampling = False
+        if self.usage_mode == "event" and not self._usage_closed:
+            # freeze the window at the stop instant — the clock may be
+            # parked at the run horizon afterwards (Sim.run semantics),
+            # and trailing idle time is not part of the measured run
+            self._close_accs()
+            self._usage_closed = True
+            self.cluster.on_usage_change = None
+
+    def _close_accs(self):
+        if self._usage_closed:
+            return
+        # last_event_t, not t: after a bounded run the clock parks at the
+        # horizon (Sim.run semantics) — trailing idle time up to an
+        # arbitrary horizon must not dilute the usage integral.  During
+        # event execution the two are identical.
+        t = getattr(self.sim, "last_event_t", self.sim.t)
+        self.cpu_acc.close(t)
+        self.mem_acc.close(t)
+        for acc in self.tenant_cpu_accs.values():
+            acc.close(t)
 
     # ---- derived metrics (the figures) -------------------------------------
     def pod_exec_times(self, workflow: Optional[str] = None,
@@ -199,10 +269,14 @@ class MetricsCollector:
 
     def overall_usage(self) -> Tuple[float, float]:
         """Run-wide average (cpu_rate, mem_rate) vs allocatable; works
-        in both sample modes (streaming keeps only the accumulators)."""
+        in both sample modes (streaming keeps only the accumulators)
+        and in event mode (exact step-function integral)."""
         cpu_a, mem_a = self.cluster.allocatable()
         if cpu_a == 0:
             return 0.0, 0.0
+        if self.usage_mode == "event":
+            self._close_accs()
+            return self.cpu_acc.mean() / cpu_a, self.mem_acc.mean() / mem_a
         if self.sample_mode == "streaming":
             if not self.cpu_stat.count:
                 return 0.0, 0.0
@@ -213,6 +287,50 @@ class MetricsCollector:
         cpu = sum(c for _, c, _ in self.samples) / n / cpu_a
         mem = sum(m for _, _, m in self.samples) / n / mem_a
         return cpu, mem
+
+    def usage_summary(self) -> Dict[str, Dict[str, float]]:
+        """Mean/peak/p95 usage rates vs allocatable, per resource.
+
+        ``usage_mode="event"``: exact closed-form over the bind/release
+        step function (``basis="event"``, plus the change count).
+        ``"sampled"``: derived from the 0.5 s samples (full mode) or
+        the streaming accumulators — the historical approximation.
+        """
+        cpu_a, mem_a = self.cluster.allocatable()
+        if cpu_a == 0:
+            return {}
+        if self.usage_mode == "event":
+            self._close_accs()
+            out = {}
+            for key, acc, alloc in (("cpu", self.cpu_acc, cpu_a),
+                                    ("mem", self.mem_acc, mem_a)):
+                out[key] = {"basis": "event", "changes": acc.changes,
+                            "mean_rate": acc.mean() / alloc,
+                            "peak_rate": acc.peak / alloc,
+                            "p95_rate": acc.percentile(95) / alloc}
+            return out
+        out = {}
+        if self.sample_mode == "streaming":
+            pairs = (("cpu", self.cpu_stat, cpu_a),
+                     ("mem", self.mem_stat, mem_a))
+            for key, st, alloc in pairs:
+                if not st.count:
+                    continue
+                out[key] = {"basis": "sampled", "samples": st.count,
+                            "mean_rate": st.mean / alloc,
+                            "peak_rate": st.max / alloc,
+                            "p95_rate": st.percentile(95) / alloc}
+            return out
+        if self.samples:
+            n = len(self.samples)
+            for key, idx, alloc in (("cpu", 1, cpu_a), ("mem", 2, mem_a)):
+                xs = sorted(s[idx] for s in self.samples)
+                out[key] = {"basis": "sampled", "samples": n,
+                            "mean_rate": sum(xs) / n / alloc,
+                            "peak_rate": xs[-1] / alloc,
+                            "p95_rate": xs[min(n - 1, round(0.95 * (n - 1)))]
+                                        / alloc}
+        return out
 
     def usage_rate_over(self, t0: float, t1: float) -> Tuple[float, float]:
         """Average (cpu_rate, mem_rate) over [t0, t1] vs allocatable."""
@@ -259,13 +377,14 @@ class MetricsCollector:
         out: Dict[str, Dict[str, float]] = {}
         for tenant in sorted({r.tenant for r in self.workflows.values()}):
             recs = self.tenant_records(tenant)
-            done = [r for r in recs if r.ns_deleted > 0]
+            done = [r for r in recs if r.ns_deleted > 0 and not r.failed]
             delays = [r.queue_delay for r in done
                       if r.queue_delay == r.queue_delay]      # drop NaN
             lifecycles = [r.lifecycle for r in done]
             out[tenant] = {
                 "workflows": float(len(recs)),
                 "completed": float(len(done)),
+                "failed": float(sum(1 for r in recs if r.failed)),
                 "makespan": self.tenant_makespan(tenant),
                 "avg_queue_delay": (sum(delays) / len(delays)
                                     if delays else float("nan")),

@@ -51,6 +51,15 @@ pending request (tracked by value-count multisets), so a saturated
 evaluate is O(1) instead of O(P). ``requested()`` reads the pod
 informer's running aggregates instead of scanning its cache, and
 ``allocatable()`` is cached on the node informer's generation.
+
+10k-workflow tier (ISSUE 3): reservation reconciliation no longer
+scans the whole ledger per evaluate — only keys the informer cache
+wrote since the last sync plus reservations added since then can have
+become droppable (see ``_sync_reservations`` for the exactness
+argument), and per-tenant reserved-cpu totals make
+``tenant_usage_cpu`` O(tenants) instead of O(ledger) per fair-share
+grant round.  The arbiter is the single consumer of the pod
+informer's ``touched`` list: exactly one arbiter per InformerSet.
 """
 from __future__ import annotations
 
@@ -234,6 +243,8 @@ class AdmissionArbiter(ResourceGatherer):
         self._seq = 0
         self._reserved_cpu = 0
         self._reserved_mem = 0
+        self._reserved_cpu_by_tenant: Dict[str, int] = {}
+        self._fresh_reserved: List[Tuple[str, str]] = []   # since last sync
         self._fresh: List[AdmissionRequest] = []   # not yet deferral-checked
         self._min_cpu = Counter()      # value -> count over pending requests
         self._min_mem = Counter()
@@ -260,17 +271,50 @@ class AdmissionArbiter(ResourceGatherer):
         """Drop reservations for pods the informer now sees as
         non-terminal — from that point ``requested()`` accounts for
         them. (A FAILED/SUCCEEDED cache entry can be a *previous*
-        incarnation of a retried pod name, so it doesn't count.)"""
+        incarnation of a retried pod name, so it doesn't count.)
+
+        Only candidate keys are checked instead of the whole ledger:
+        a reservation can become droppable only if its cache entry was
+        written since the last sync (``informer.touched``) or it was
+        added since then (``_fresh_reserved``) — any key already
+        checked and kept, with an untouched cache entry, would be kept
+        again. Exactly the full scan's drop set, at O(changes) cost
+        (the full ledger scan per evaluate dominated the 10k-workflow
+        admission profile)."""
+        pods = self.inf.pods
+        touched = pods.touched
+        fresh = self._fresh_reserved
         reserved = self.reserved
         if not reserved:
+            if touched:
+                touched.clear()
+            if fresh:
+                fresh.clear()
             return
-        cache = self.inf.pods.cache
-        drop = [k for k in reserved
-                if k in cache and cache[k].phase in (PENDING, RUNNING)]
-        for key in drop:
-            _t, cpu, mem, _at = reserved.pop(key)
-            self._reserved_cpu -= cpu
-            self._reserved_mem -= mem
+        cache = pods.cache
+        for candidates in (touched, fresh):
+            for key in candidates:
+                held = reserved.get(key)
+                if held is None:
+                    continue
+                pod = cache.get(key)
+                if pod is not None and pod.phase in (PENDING, RUNNING):
+                    del reserved[key]
+                    self._reserved_cpu -= held[1]
+                    self._reserved_mem -= held[2]
+                    self._tenant_unreserve(held[0], held[1])
+        if touched:
+            touched.clear()
+        if fresh:
+            fresh.clear()
+
+    def _tenant_unreserve(self, tenant: str, cpu: int):
+        by = self._reserved_cpu_by_tenant
+        left = by[tenant] - cpu
+        if left:
+            by[tenant] = left
+        else:
+            del by[tenant]
 
     def reserve(self, namespace: str, name: str, tenant: str,
                 cpu: int, mem: int):
@@ -285,12 +329,16 @@ class AdmissionArbiter(ResourceGatherer):
             self.reserved[key] = (tenant, cpu, mem, self.inf.pods.sim.now())
             self._reserved_cpu += cpu
             self._reserved_mem += mem
+            by = self._reserved_cpu_by_tenant
+            by[tenant] = by.get(tenant, 0) + cpu
+            self._fresh_reserved.append(key)
 
     def _drop_reservation(self, key: Tuple[str, str]):
         held = self.reserved.pop(key, None)
         if held is not None:
             self._reserved_cpu -= held[1]
             self._reserved_mem -= held[2]
+            self._tenant_unreserve(held[0], held[1])
 
     def available(self) -> Tuple[int, int]:
         self._sync_reservations()
@@ -299,10 +347,11 @@ class AdmissionArbiter(ResourceGatherer):
 
     def tenant_usage_cpu(self) -> Dict[str, int]:
         """CPU currently held per tenant: informer-visible non-terminal
-        pods plus not-yet-visible reservations."""
+        pods plus not-yet-visible reservations (O(tenants) — the
+        fair-share walk reads this once per grant round)."""
         self._sync_reservations()
         usage = dict(self.inf.pods.nonterminal_cpu_by_tenant)
-        for tenant, cpu, _mem, _t in self.reserved.values():
+        for tenant, cpu in self._reserved_cpu_by_tenant.items():
             usage[tenant] = usage.get(tenant, 0) + cpu
         return usage
 

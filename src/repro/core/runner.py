@@ -73,7 +73,10 @@ class ControlPlane:
                  admission_policy: str = "fifo",
                  sample_resources: bool = True,
                  sample_mode: str = "full",
-                 retain_pod_log: bool = True):
+                 usage_mode: str = "sampled",
+                 retain_pod_log: bool = True,
+                 lifecycle: Optional[str] = None,
+                 queue: Optional[str] = None):
         if engine_name not in ENGINES:
             raise ValueError(f"unknown engine {engine_name!r}; "
                              f"expected one of {sorted(ENGINES)}")
@@ -86,18 +89,21 @@ class ControlPlane:
         self.engine_name = engine_name
         self.params = params
         self.sample_resources = sample_resources
-        self.sim = Sim()
+        self.sim = Sim(queue=queue)
         self.cluster = Cluster(self.sim, params, cluster_cfg,
                                payload_mode=payload_mode, seed=seed,
-                               retain_pod_log=retain_pod_log)
+                               retain_pod_log=retain_pod_log,
+                               lifecycle=lifecycle)
         self.volumes = VolumeManager(self.sim, self.cluster, params)
         self.metrics = MetricsCollector(self.sim, self.cluster, params,
-                                        sample_mode=sample_mode)
+                                        sample_mode=sample_mode,
+                                        usage_mode=usage_mode)
         self.arbiter: Optional[AdmissionArbiter] = None
 
         if engine_name == "kubeadaptor":
             self.informers = InformerSet(self.sim, self.cluster, params)
-            self.events = EventRegistry(self.sim)
+            self.events = EventRegistry(self.sim,
+                                        batched=self.cluster.lifecycle == "fast")
             self.arbiter = AdmissionArbiter(
                 self.informers, policy=admission_policy,
                 on_defer=self.metrics.note_admission_deferred)
@@ -126,6 +132,33 @@ class ControlPlane:
         if self.arbiter is not None:
             self.arbiter.set_tenant(tenant, priority=priority, weight=weight)
         return self.gateway.add_stream(spec)
+
+    def add_trace(self, records, tenants: Optional[dict] = None, make=None):
+        """Replay an arrival trace (see ``WorkflowGateway.load_trace``).
+
+        ``records``: iterable of ``{"t", "tenant", "topology"}`` dicts.
+        ``tenants``: optional ``{name: {"priority", "weight"}}`` map
+        registered on the arbiter. ``make``: ``topology -> Workflow``
+        factory; defaults to the paper topologies in configs/workflows.
+        """
+        if make is None:
+            from repro.configs.workflows import get_workflow_spec
+            from repro.core.dag import make_workflow
+            cache: dict = {}
+
+            def make(topo):
+                wfb = cache.get(topo)
+                if wfb is None:
+                    wfb = cache[topo] = make_workflow(
+                        topo, get_workflow_spec(topo))
+                return wfb
+
+        if tenants and self.arbiter is not None:
+            for name, share in tenants.items():
+                self.arbiter.set_tenant(
+                    name, priority=int(share.get("priority", 0)),
+                    weight=float(share.get("weight", 1.0)))
+        return self.gateway.load_trace(records, make)
 
     # -- execution -----------------------------------------------------------
     def run(self, horizon_s: float = 500_000.0) -> RunResult:
