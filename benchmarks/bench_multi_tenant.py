@@ -4,9 +4,17 @@ point of this space).
 
 Each scenario runs N identical tenants of wide fan-out workflows on a
 2-node cluster (admission-bound), and reports per-policy makespan
-spread, queueing delay, and deferral counts. The ``fairness`` rows
-additionally report the contended-CPU ratio between a weight-3 tenant
-and a weight-1 tenant — ~1 under fifo, >1.5 under fair-share.
+spread, queueing delay, and deferral counts.  Since ISSUE 4 the sweep
+runs on the PR-3 fast core (event-driven usage accounting, streaming
+metrics, no pod log) and covers the pipeline policies: the ``drf``
+ordering joins the legacy three, the ``fairness`` rows report the
+bound-CPU ratio between a weight-3 and a weight-1 tenant (~1 under
+fifo, >1.5 under fair-share — from the exact usage step functions, not
+the 0.5 s sampler), and two pipeline rows exercise the new stages:
+``mt_quota_caps`` (hard cap on one tenant: quota rejects, exact peak
+vs cap) and ``mt_preempt`` (starved high-priority tenant evicting
+batch pods: preemption count, SLO hit-rates).  Row schema:
+benchmarks/README.md §Multi-tenant sweep.
 """
 import time
 
@@ -16,10 +24,15 @@ from repro.core import calibration as cal
 from repro.core.dag import make_workflow
 from repro.core.runner import ControlPlane
 
-POLICIES = ("fifo", "priority", "fair-share")
+POLICIES = ("fifo", "priority", "fair-share", "drf")
 ARRIVALS = ("serial", "concurrent", "poisson")
 TENANT_COUNTS = (2, 4)
 SMALL_CLUSTER = cal.PaperCluster(n_nodes=2)
+
+# PR-3 fast-core knobs (exactness vs the sampled/full mode is pinned by
+# tests/test_event_core.py; decisions are bit-identical)
+FAST_KW = dict(usage_mode="event", sample_mode="streaming",
+               retain_pod_log=False)
 
 
 def wide_wf(name):
@@ -36,7 +49,7 @@ def _stream_kwargs(arrival, i):
 
 def sweep(n_tenants, arrival, policy, repeats=3, seed=7):
     plane = ControlPlane("kubeadaptor", admission_policy=policy,
-                         cluster_cfg=SMALL_CLUSTER, seed=seed)
+                         cluster_cfg=SMALL_CLUSTER, seed=seed, **FAST_KW)
     for i in range(n_tenants):
         plane.add_stream(wide_wf(f"t{i}"), repeats=repeats,
                          tenant=f"tenant{i}", priority=n_tenants - i,
@@ -65,17 +78,21 @@ def run():
                     f"deferrals={res.arbiter.deferrals};"
                     f"admitted={res.arbiter.admitted}"))
 
-    # fairness focus: weight-3 vs weight-1 contended CPU ratio per policy
+    # fairness focus: weight-3 vs weight-1 contended-CPU ratio per
+    # policy, from the exact event-driven contention tracker (~1 under
+    # fifo, >1.5 under fair-share — same semantics the 0.5 s sampler
+    # used to approximate)
     for policy in POLICIES:
         t0 = time.perf_counter()
         plane = ControlPlane("kubeadaptor", admission_policy=policy,
-                             cluster_cfg=SMALL_CLUSTER, seed=5)
+                             cluster_cfg=SMALL_CLUSTER, seed=5, **FAST_KW)
         plane.add_stream(wide_wf("heavy"), repeats=4, tenant="heavy",
                          arrival="concurrent", concurrency=2,
                          weight=3.0, priority=10)
         plane.add_stream(wide_wf("light"), repeats=4, tenant="light",
                          arrival="concurrent", concurrency=2,
                          weight=1.0, priority=0)
+        plane.metrics.track_contention(["heavy", "light"])
         res = plane.run(horizon_s=500_000)
         wall = (time.perf_counter() - t0) * 1e6
         avg = res.metrics.contended_cpu(["heavy", "light"])
@@ -87,9 +104,78 @@ def run():
             f"heavy_makespan_s={s['heavy']['makespan']:.1f};"
             f"light_makespan_s={s['light']['makespan']:.1f}"))
 
+    # dominant-resource focus: a memory-hog vs a cpu-hog tenant —
+    # cpu-only fair-share over-serves the memory hog (it always looks
+    # cpu-underserved); drf ranks it by its dominant (memory) share
+    def hog(name, cpu_m, mem_mi, width=10):
+        return make_workflow(name, {
+            str(i): {"input": [], "output": [], "cpuNum": [str(cpu_m)],
+                     "memNum": [str(mem_mi)],
+                     "args": ["-c", "1", "-m", "100", "-t", "5"]}
+            for i in range(width)})
+
+    for policy in ("fair-share", "drf"):
+        t0 = time.perf_counter()
+        plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                             cluster_cfg=SMALL_CLUSTER, seed=3, **FAST_KW)
+        plane.add_stream(hog("memhog", 200, 4000), repeats=3, tenant="mem",
+                         arrival="concurrent", concurrency=2)
+        plane.add_stream(hog("cpuhog", 1500, 300), repeats=3, tenant="cpu",
+                         arrival="concurrent", concurrency=2)
+        res = plane.run(horizon_s=500_000)
+        wall = (time.perf_counter() - t0) * 1e6
+        s = res.metrics.tenant_summary()
+        rows.append(row(
+            f"mt_mixed_hogs_{policy}", wall,
+            f"mem_tenant_mean_mem_mi={res.metrics.tenant_mean_mem('mem'):.0f};"
+            f"cpu_tenant_mean_cpu_m={res.metrics.tenant_mean_cpu('cpu'):.0f};"
+            f"mem_makespan_s={s['mem']['makespan']:.1f};"
+            f"cpu_makespan_s={s['cpu']['makespan']:.1f}"))
+
+    # pipeline stages (ISSUE 4): hard quota caps ...
+    t0 = time.perf_counter()
+    plane = ControlPlane("kubeadaptor", admission_policy="quota",
+                         cluster_cfg=SMALL_CLUSTER, seed=5, **FAST_KW)
+    plane.add_stream(wide_wf("capped"), repeats=4, tenant="capped",
+                     arrival="concurrent", concurrency=2, quota_cpu_m=4800)
+    plane.add_stream(wide_wf("free"), repeats=4, tenant="free",
+                     arrival="concurrent", concurrency=2)
+    res = plane.run(horizon_s=500_000)
+    wall = (time.perf_counter() - t0) * 1e6
+    s = res.metrics.tenant_summary()
+    rows.append(row(
+        "mt_quota_caps", wall,
+        f"quota_cpu_m=4800;"
+        f"capped_peak_cpu_m={res.metrics.tenant_cpu_accs['capped'].peak:.0f};"
+        f"quota_rejects={res.arbiter.quota_rejects};"
+        f"capped_makespan_s={s['capped']['makespan']:.1f};"
+        f"free_makespan_s={s['free']['makespan']:.1f}"))
+
+    # ... and priority preemption with per-stream SLO tracking
+    t0 = time.perf_counter()
+    plane = ControlPlane("kubeadaptor", admission_policy="preempt",
+                         cluster_cfg=SMALL_CLUSTER, seed=7, **FAST_KW)
+    plane.add_stream(wide_wf("batch"), repeats=3, tenant="batch",
+                     arrival="concurrent", concurrency=2, priority=0,
+                     deadline_s=500.0)
+    plane.add_stream(wf("montage"), repeats=2, tenant="prod",
+                     arrival="poisson", rate=0.2, burst=2, priority=10,
+                     deadline_s=160.0)
+    res = plane.run(horizon_s=500_000)
+    wall = (time.perf_counter() - t0) * 1e6
+    s = res.metrics.tenant_summary()
+    rows.append(row(
+        "mt_preempt", wall,
+        f"preemptions={res.arbiter.preemptions};"
+        f"batch_preempted={s['batch']['preempted']:.0f};"
+        f"prod_slo_hit_rate={s['prod']['deadline_hit_rate']:.2f};"
+        f"batch_slo_hit_rate={s['batch']['deadline_hit_rate']:.2f};"
+        f"prod_makespan_s={s['prod']['makespan']:.1f}"))
+
     # paper workflows as a multi-tenant mix (sanity: realistic DAGs)
     t0 = time.perf_counter()
-    plane = ControlPlane("kubeadaptor", admission_policy="fair-share", seed=3)
+    plane = ControlPlane("kubeadaptor", admission_policy="fair-share", seed=3,
+                         **FAST_KW)
     for i, name in enumerate(("montage", "cybershake")):
         plane.add_stream(wf(name), repeats=3, tenant=f"paper{i}",
                          arrival="concurrent", concurrency=2)

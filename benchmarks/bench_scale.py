@@ -18,7 +18,7 @@ benchmarks/README.md).
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_scale \
         [--workflows 1000] [--nodes 100] [--tiers 1000x100,10000x1000] \
-        [--seed 42] [--policies fifo,priority,fair-share] \
+        [--seed 42] [--policies fifo,priority,fair-share,drf,quota,preempt] \
         [--queue calendar|heap] [--usage-mode event|sampled] \
         [--lifecycle fast|chained] [--trace examples/trace_mixed.json] \
         [--out BENCH_scale.json] [--budget-s 0] \
@@ -32,6 +32,14 @@ replays a recorded arrival trace (see ``arrival_trace/v1`` in
 benchmarks/README.md) instead of the synthetic streams. The module's
 ``run()`` (for ``benchmarks.run``) executes a reduced
 50-workflow/20-node smoke variant of the synthetic scenario.
+
+Admission-pipeline policies (ISSUE 4): ``--policies`` also accepts
+``drf`` (dominant-resource fair share), ``quota`` (fifo ordering with
+hard per-tenant CPU caps — prod 20% / batch 10% of the cluster, so the
+caps genuinely bind), and ``preempt`` (priority ordering + starvation
+eviction).  Every stream carries an SLO deadline (prod 180 s / batch
+3600 s — metrics only); runs report per-tenant deadline hit-rates plus
+preemption and quota-reject counts.
 
 The script still runs against the pre-optimization core (counters it
 introduced are read via getattr) so speedups can be measured by
@@ -53,6 +61,17 @@ from repro.core.runner import ControlPlane
 
 TOPOLOGIES = ("montage", "epigenomics", "cybershake", "ligo")
 POLICIES = ("fifo", "priority", "fair-share")
+# pipeline policies (ISSUE 4) accepted by --policies next to the three
+# legacy names: drf ordering, hard quota caps, priority preemption
+PIPELINE_POLICIES = ("drf", "quota", "preempt")
+# per-stream SLO deadlines (reported as deadline hit-rates; pure
+# metrics — legacy-policy scheduling is unaffected)
+PROD_DEADLINE_S = 180.0
+BATCH_DEADLINE_S = 3600.0
+# under --policies quota: per-tenant caps as fractions of cluster CPU
+# (sum over the 8 streams = 120%, so caps genuinely bind under load)
+PROD_QUOTA_FRAC = 0.20
+BATCH_QUOTA_FRAC = 0.10
 SCHEMA = "bench_scale/v2"
 
 
@@ -87,23 +106,38 @@ def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
     per, rem = divmod(n_workflows, n_streams)
     # enough closed-loop concurrency to keep ~666 pod slots/100 nodes busy
     conc = max(2, (n_nodes * 7) // (n_streams * 4))
+    total_cpu_m = n_nodes * cal.PaperCluster.node_cpu_m
+    quotas = {"prod": 0, "batch": 0}
+    if policy == "quota":           # caps only bind under the quota preset
+        quotas = {"prod": int(PROD_QUOTA_FRAC * total_cpu_m),
+                  "batch": int(BATCH_QUOTA_FRAC * total_cpu_m)}
+    deadlines = {"prod": PROD_DEADLINE_S, "batch": BATCH_DEADLINE_S}
     i = 0
     for topo in TOPOLOGIES:
         wf = make_workflow(topo, get_workflow_spec(topo))
         for klass, prio, weight in (("prod", 10, 3.0), ("batch", 0, 1.0)):
             repeats = per + (1 if i < rem else 0)
+            extra = {}
+            if quotas[klass]:
+                extra["quota_cpu_m"] = quotas[klass]
+            if _add_stream_accepts("deadline_s"):
+                extra["deadline_s"] = deadlines[klass]
             if klass == "prod":     # closed-loop interactive tenant
                 plane.add_stream(wf, repeats=repeats,
                                  tenant=f"{topo}-{klass}",
                                  arrival="concurrent", concurrency=conc,
-                                 priority=prio, weight=weight)
+                                 priority=prio, weight=weight, **extra)
             else:                   # open-loop surge: deep pending queue
                 plane.add_stream(wf, repeats=repeats,
                                  tenant=f"{topo}-{klass}",
                                  arrival="poisson", rate=0.5, burst=2,
-                                 priority=prio, weight=weight)
+                                 priority=prio, weight=weight, **extra)
             i += 1
     return plane
+
+
+def _add_stream_accepts(name):
+    return name in inspect.signature(ControlPlane.add_stream).parameters
 
 
 def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
@@ -120,6 +154,7 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
     failed = sum(1 for r in m.workflows.values() if r.failed)
     events = getattr(res.sim, "events_processed", None)
     pods = getattr(res.cluster, "pods_created", None)
+    summary_by_tenant = m.tenant_summary()
     # pre-optimization cores leave sim.t at the drain time; the current
     # core parks it at the horizon and keeps the drain in last_event_t
     makespan = getattr(res.sim, "last_event_t", res.sim.t)
@@ -146,8 +181,20 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
             resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024, 1),
         "tenant_makespan_s": {
             t: round(s["makespan"], 2)
-            for t, s in m.tenant_summary().items()},
+            for t, s in summary_by_tenant.items()},
     }
+    # admission-pipeline observables (ISSUE 4): zero/absent on cores
+    # that predate them; always emitted by the pipeline core so the
+    # quota/preempt sweeps land in the same schema
+    rec["preemptions"] = getattr(res.arbiter, "preemptions", None)
+    rec["quota_rejects"] = getattr(res.arbiter, "quota_rejects", None)
+    slo = {t: {"deadline_s": s["deadline_s"],
+               "hit_rate": (round(s["deadline_hit_rate"], 4)
+                            if s["deadline_hit_rate"] == s["deadline_hit_rate"]
+                            else None)}
+           for t, s in summary_by_tenant.items() if "deadline_s" in s}
+    if slo:
+        rec["slo"] = slo
     summary = getattr(m, "usage_summary", None)
     if summary is not None:
         cpu = summary().get("cpu")

@@ -53,6 +53,10 @@ class ClusterParams:
     create_retry_backoff: float = 0.25  # wait before re-creating after
                                         # AlreadyExists delete+retry (§4.5);
                                         # avoids hot-looping the apiserver
+    preempt_cooldown_s: float = 5.0     # min gap between preemption plans
+                                        # per starved tenant (bounds
+                                        # eviction churn while a plan's
+                                        # deletions are still in flight)
     straggler_factor: float = 1.5      # speculative copy beyond x expected
     straggler_min_wait: float = 5.0
     # metrics

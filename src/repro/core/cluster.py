@@ -62,7 +62,12 @@ Usage accounting: the cluster maintains exact in-use cpu/mem totals
 (``cpu_in_use``/``mem_in_use``, updated at bind/release) so ``used()``
 is O(1), and fires ``on_usage_change`` after every change — the
 event-driven usage accumulator in core/metrics.py hangs off this hook
-instead of polling a 0.5 s sampler.
+instead of polling a 0.5 s sampler.  The bind/release path also keeps
+per-tenant holding cpu AND mem (quota/DRF accounting, ISSUE 4), and
+``evict_pod`` is the admission pipeline's preemption primitive: a
+RUNNING pod is killed and released immediately, surfacing as FAILED
+with ``evicted=True`` so the engine re-queues the task through
+admission without charging the retry budget.
 """
 from __future__ import annotations
 
@@ -127,6 +132,7 @@ class PodObj(_FastCopy):
     finished: float = -1.0
     deleted: float = -1.0
     restarts: int = 0
+    evicted: bool = False              # preempted by the admission pipeline
     _holding: bool = False             # currently holds node resources
 
 
@@ -224,9 +230,11 @@ class Cluster:
             self._c_free_cpu = None
         self.max_pending_pods = 0            # peak unbound-pod queue depth
         self.sched_cycles = 0
-        # bound (resource-holding) cpu per tenant label, kept current at
-        # bind/release so samplers never scan the pod table
+        self.evictions = 0                   # pods preempted via evict_pod
+        # bound (resource-holding) cpu/mem per tenant label, kept current
+        # at bind/release so samplers never scan the pod table
         self.tenant_holding_cpu: Dict[str, int] = {}
+        self.tenant_holding_mem: Dict[str, int] = {}
 
     # ---- watch ---------------------------------------------------------
     def watch(self, kind: str, cb: Callable[[WatchEvent], None]):
@@ -453,6 +461,7 @@ class Cluster:
             self.mem_in_use -= pod.mem_mi
             tenant = pod.labels.get("tenant", "default")
             self.tenant_holding_cpu[tenant] -= pod.cpu_m
+            self.tenant_holding_mem[tenant] -= pod.mem_mi
             if self.on_usage_change is not None:
                 self.on_usage_change(tenant)
 
@@ -551,6 +560,8 @@ class Cluster:
         tenant = pod.labels.get("tenant", "default")
         self.tenant_holding_cpu[tenant] = \
             self.tenant_holding_cpu.get(tenant, 0) + pod.cpu_m
+        self.tenant_holding_mem[tenant] = \
+            self.tenant_holding_mem.get(tenant, 0) + pod.mem_mi
         if self.on_usage_change is not None:
             self.on_usage_change(tenant)
         self._pending_pods.pop((pod.namespace, pod.name), None)
@@ -635,6 +646,22 @@ class Cluster:
         pod = self.pods.get((namespace, name))
         if pod is not None and pod.phase == RUNNING:
             self._finish(pod, FAILED)
+
+    def evict_pod(self, namespace: str, name: str) -> bool:
+        """Preemption path of the admission pipeline: kill a RUNNING
+        pod now, releasing its node resources.  The pod surfaces as
+        FAILED with ``evicted=True`` so the engine re-queues its task
+        through admission instead of charging the retry budget.
+        Returns False when the pod is gone or not RUNNING (the
+        arbiter's informer view may lag the apiserver)."""
+        self.api_calls += 1
+        pod = self.pods.get((namespace, name))
+        if pod is None or pod.phase != RUNNING:
+            return False
+        pod.evicted = True
+        self.evictions += 1
+        self._finish(pod, FAILED)
+        return True
 
     # ---- node failure (fault-tolerance substrate) -------------------------
     def fail_node(self, name: str):

@@ -275,6 +275,24 @@ class KubeAdaptorEngine:
         if tid in ws.completed:          # twin already finished the task
             self.cluster.delete_pod(pod.namespace, pod.name)
             return
+        if getattr(pod, "evicted", False):
+            # preempted by the admission pipeline: not a failure — the
+            # task re-enters the ready pool and re-queues through
+            # admission (it must not steal back the freed headroom),
+            # with no retry-budget charge
+            self.metrics.wf_record(ws.wf).preempted += 1
+
+            def requeue(_p):
+                if pod.name.endswith("-twin"):
+                    return               # the RUNNING primary still owns the
+                #                          task — touching created/ready here
+                #                          would spawn a duplicate primary
+                ws.created.discard(tid)
+                if tid not in ws.completed and ws.unmet[tid] == 0:
+                    ws.ready_pool.add(tid)
+                self._submit_ready(ws)
+            self.cluster.delete_pod(pod.namespace, pod.name, cb=requeue)
+            return
         n = ws.retries.get(tid, 0) + 1
         ws.retries[tid] = n
         self.metrics.wf_record(ws.wf).retries += 1

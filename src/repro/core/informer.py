@@ -69,10 +69,11 @@ class Informer:
         self.nonterminal_cpu = 0
         self.nonterminal_mem = 0
         self.nonterminal_cpu_by_tenant: Dict[str, int] = {}
+        self.nonterminal_mem_by_tenant: Dict[str, int] = {}
         # keys written (set or pop) since the arbiter last reconciled
         # its reservation ledger — lets the sync touch only keys whose
         # droppability can have changed instead of scanning the ledger
-        # (single consumer: AdmissionArbiter._sync_reservations clears)
+        # (single consumer: policy.ReservationLedger.sync clears)
         self.touched: List[Any] = []
         self._list_fn = {
             "pod": cluster.list_pods,
@@ -112,12 +113,15 @@ class Informer:
         t = pod.labels.get("tenant", "default")
         by = self.nonterminal_cpu_by_tenant
         by[t] = by.get(t, 0) + pod.cpu_m
+        by = self.nonterminal_mem_by_tenant
+        by[t] = by.get(t, 0) + pod.mem_mi
 
     def _untrack(self, pod: Any):
         self.nonterminal_cpu -= pod.cpu_m
         self.nonterminal_mem -= pod.mem_mi
         t = pod.labels.get("tenant", "default")
         self.nonterminal_cpu_by_tenant[t] -= pod.cpu_m
+        self.nonterminal_mem_by_tenant[t] -= pod.mem_mi
 
     # ---- list-watch ------------------------------------------------------
     def _initial_list(self):

@@ -27,6 +27,12 @@ Two front-ends share that machinery:
   Streams are drained from ``collections.deque`` (O(1) pops); the
   gateway allocates globally unique instance ids per workflow name so
   namespaces and metric keys never collide across tenants.
+
+  The gateway also *captures*: every dispatch (any arrival mode) is
+  logged at its pre-gRPC instant and ``record_trace()`` emits the run
+  as an ``arrival_trace/v1`` document, so a live run's arrivals can be
+  replayed exactly via ``load_trace`` — closing the ROADMAP's
+  capture/replay loop.
 """
 from __future__ import annotations
 
@@ -95,6 +101,9 @@ class StreamSpec:
     burst: int = 1                 # instances per poisson arrival
     priority: int = 0              # admission priority (higher wins)
     weight: float = 1.0            # fair-share weight
+    quota_cpu_m: int = 0           # hard admission cap (0 = uncapped)
+    quota_mem_mi: int = 0
+    deadline_s: float = 0.0        # per-workflow SLO deadline (0 = none)
 
     def __post_init__(self):
         if self.arrival not in ARRIVAL_MODES:
@@ -104,6 +113,8 @@ class StreamSpec:
             raise ValueError("poisson arrival needs rate > 0")
         if self.concurrency < 1 or self.burst < 1 or self.repeats < 0:
             raise ValueError("concurrency/burst must be >= 1, repeats >= 0")
+        if self.quota_cpu_m < 0 or self.quota_mem_mi < 0 or self.deadline_s < 0:
+            raise ValueError("quota caps / deadline must be >= 0")
 
 
 class _Stream:
@@ -138,6 +149,9 @@ class WorkflowGateway:
         self._by_ns: Dict[str, _Stream] = {}
         self._instances: Dict[str, int] = {}     # workflow name -> next id
         self._started = False
+        # every dispatch as (virtual t, tenant, topology) — the raw
+        # material of record_trace (one small tuple per workflow)
+        self.trace_log: List[tuple] = []
 
     # -- stream registration ----------------------------------------------
     def add_stream(self, spec: StreamSpec) -> StreamSpec:
@@ -227,6 +241,7 @@ class WorkflowGateway:
         stream.sent += 1
         self.sent += 1
         self._by_ns[wf.namespace()] = stream
+        self.trace_log.append((self.sim.now(), wf.tenant, wf.name))
         self.sim.after(self.grpc_latency, lambda: self.send_to(wf))
 
     def _schedule_arrival(self, stream: _Stream):
@@ -256,11 +271,49 @@ class WorkflowGateway:
                 stream.sent += 1
                 self.sent += 1
                 self._by_ns[wf.namespace()] = stream
+                self.trace_log.append((self.sim.now(), wf.tenant, wf.name))
                 self.sim.after(self.grpc_latency,
                                lambda w=wf: self.send_to(w))
             self._schedule_trace(stream)
 
         self.sim.at(due, arrive, note="trace-arrival")
+
+    # -- trace capture (arrival_trace/v1) -----------------------------------
+    def record_trace(self, path: Optional[str] = None) -> dict:
+        """Emit the run's dispatches as an ``arrival_trace/v1`` document
+        (the exact format ``load_trace`` / ``ControlPlane.add_trace`` /
+        ``bench_scale --trace`` replay).  Each dispatch is recorded at
+        its pre-gRPC instant, so a replay reproduces every submission
+        time exactly (round-trip pinned by tests/test_policy_pipeline).
+
+        The ``topology`` key is the workflow's base name — a replay's
+        ``make`` factory must resolve it (the default factory knows the
+        paper topologies).  Tenant shares (priority / weight / quota
+        caps / deadline) come from the registered stream specs.
+        """
+        tenants: Dict[str, dict] = {}
+        for stream in self.streams:
+            spec = stream.spec
+            share = {"priority": spec.priority, "weight": spec.weight}
+            if spec.quota_cpu_m:
+                share["quota_cpu_m"] = spec.quota_cpu_m
+            if spec.quota_mem_mi:
+                share["quota_mem_mi"] = spec.quota_mem_mi
+            if spec.deadline_s:
+                share["deadline_s"] = spec.deadline_s
+            tenants[spec.tenant] = share
+        doc = {
+            "schema": "arrival_trace/v1",
+            "tenants": tenants,
+            "arrivals": [{"t": t, "tenant": tenant, "topology": topo}
+                         for t, tenant, topo in self.trace_log],
+        }
+        if path is not None:
+            import json
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=2)
+                f.write("\n")
+        return doc
 
     # -- next-workflow trigger (completion routing) -------------------------
     def workflow_done(self, wf: Workflow):

@@ -15,7 +15,11 @@ tenant; ``note_submitted`` timestamps gateway hand-off so queueing
 delay (submission -> namespace creation) is measurable; the sampler
 also breaks bound node usage down per tenant; ``tenant_summary``
 aggregates makespan / queueing delay / lifecycle / admission
-deferrals per tenant for the multi-tenant benchmarks.
+deferrals per tenant for the multi-tenant benchmarks — plus, with the
+admission pipeline (ISSUE 4), per-tenant quota-reject counts,
+preempted-pod counts, and the per-stream SLO: ``set_tenant_deadline``
+registers a deadline and the summary reports its hit-rate over
+completed workflows (submission -> namespace teardown).
 
 Scale tier (ISSUE 2): ``sample_mode="streaming"`` replaces the
 unbounded per-sample lists with flat-memory accumulators
@@ -60,6 +64,7 @@ class WorkflowRecord:
     starts: List[Tuple[float, str]] = field(default_factory=list)   # (t, task)
     finishes: Dict[str, float] = field(default_factory=dict)
     retries: int = 0
+    preempted: int = 0             # task pods evicted by the Preempt stage
     failed: bool = False           # retry budget exhausted (fail-workflow)
     failure: str = ""
 
@@ -75,6 +80,42 @@ class WorkflowRecord:
         if self.submitted_at < 0 or self.first_create < 0:
             return float("nan")
         return self.first_create - self.submitted_at
+
+
+class _ContentionTracker:
+    """Exact contended-window integrals for ``usage_mode="event"``:
+    per-tenant bound-CPU·seconds accumulated ONLY while every tracked
+    tenant holds resources — the event-driven equivalent of filtering
+    the 0.5 s samples to instants where all tenants appear."""
+
+    __slots__ = ("tenants", "levels", "active", "last_t",
+                 "cpu_seconds", "contended_time")
+
+    def __init__(self, tenants, t0: float):
+        self.tenants = list(tenants)
+        self.levels = {t: 0 for t in self.tenants}
+        self.active = False
+        self.last_t = t0
+        self.cpu_seconds = {t: 0.0 for t in self.tenants}
+        self.contended_time = 0.0
+
+    def update(self, t: float, holding: Dict[str, int]):
+        if self.active and t > self.last_t:
+            dt = t - self.last_t
+            self.contended_time += dt
+            for tenant in self.tenants:
+                self.cpu_seconds[tenant] += self.levels[tenant] * dt
+        self.last_t = t
+        levels = self.levels
+        for tenant in self.tenants:
+            levels[tenant] = holding.get(tenant, 0)
+        self.active = all(levels[t] > 0 for t in self.tenants)
+
+    def means(self) -> Dict[str, float]:
+        if self.contended_time <= 0.0:
+            return {}
+        return {t: s / self.contended_time
+                for t, s in self.cpu_seconds.items()}
 
 
 class MetricsCollector:
@@ -98,12 +139,16 @@ class MetricsCollector:
         self.mem_stat = StreamingStat()
         self.tenant_cpu_stats: Dict[str, StreamingStat] = {}
         self.admission_deferrals: Dict[str, int] = {}
+        self.quota_rejects: Dict[str, int] = {}       # tenant -> count
+        self.tenant_deadlines: Dict[str, float] = {}  # tenant -> SLO seconds
         self._sampling = False
         # event-driven accounting: exact step accumulators fed by the
         # cluster's bind/release hook — no polling daemon
         self.cpu_acc: Optional[StepAccumulator] = None
         self.mem_acc: Optional[StepAccumulator] = None
         self.tenant_cpu_accs: Dict[str, StepAccumulator] = {}
+        self.tenant_mem_accs: Dict[str, StepAccumulator] = {}
+        self._contention: Optional[_ContentionTracker] = None
         self._usage_closed = False
         if usage_mode == "event":
             self.cpu_acc = StepAccumulator(t0=sim.now())
@@ -114,6 +159,8 @@ class MetricsCollector:
         t = self.sim.t
         self.cpu_acc.set(t, self.cluster.cpu_in_use)
         self.mem_acc.set(t, self.cluster.mem_in_use)
+        if self._contention is not None:
+            self._contention.update(t, self.cluster.tenant_holding_cpu)
         if tenant is not None:
             acc = self.tenant_cpu_accs.get(tenant)
             if acc is None:
@@ -123,7 +170,11 @@ class MetricsCollector:
                 # tenant stats, which are means over active samples only
                 acc = self.tenant_cpu_accs[tenant] = \
                     StepAccumulator(t0=self.cpu_acc.start_t)
+                self.tenant_mem_accs[tenant] = \
+                    StepAccumulator(t0=self.mem_acc.start_t)
             acc.set(t, self.cluster.tenant_holding_cpu.get(tenant, 0))
+            self.tenant_mem_accs[tenant].set(
+                t, self.cluster.tenant_holding_mem.get(tenant, 0))
 
     # ---- lifecycle bookkeeping (engines call these) ---------------------
     def wf_record(self, wf: Workflow) -> WorkflowRecord:
@@ -144,6 +195,14 @@ class MetricsCollector:
     def note_admission_deferred(self, tenant: str):
         self.admission_deferrals[tenant] = \
             self.admission_deferrals.get(tenant, 0) + 1
+
+    def note_quota_reject(self, tenant: str):
+        self.quota_rejects[tenant] = self.quota_rejects.get(tenant, 0) + 1
+
+    def set_tenant_deadline(self, tenant: str, deadline_s: float):
+        """Register the tenant's SLO: a completed workflow *hits* when
+        submission -> namespace teardown stays within ``deadline_s``."""
+        self.tenant_deadlines[tenant] = deadline_s
 
     def note_failed(self, wf: Workflow, reason: str = ""):
         rec = self.wf_record(wf)
@@ -216,6 +275,8 @@ class MetricsCollector:
         self.cpu_acc.close(t)
         self.mem_acc.close(t)
         for acc in self.tenant_cpu_accs.values():
+            acc.close(t)
+        for acc in self.tenant_mem_accs.values():
             acc.close(t)
 
     # ---- derived metrics (the figures) -------------------------------------
@@ -363,10 +424,56 @@ class MetricsCollector:
                  for r in recs)
         return max(r.ns_deleted for r in recs) - t0
 
+    def tenant_mean_cpu(self, tenant: str) -> float:
+        """Time/sample-averaged bound CPU (milli-cores) for one tenant,
+        available in every accounting mode: the exact step-function
+        mean in ``usage_mode="event"``, the streaming accumulator mean
+        in streaming-sample mode, the per-sample mean otherwise."""
+        if self.usage_mode == "event":
+            acc = self.tenant_cpu_accs.get(tenant)
+            if acc is None:
+                return 0.0
+            self._close_accs()
+            return acc.mean()
+        if self.sample_mode == "streaming":
+            stat = self.tenant_cpu_stats.get(tenant)
+            return stat.mean if stat is not None and stat.count else 0.0
+        if not self.tenant_samples:
+            return 0.0
+        return (sum(s.get(tenant, 0) for _, s in self.tenant_samples)
+                / len(self.tenant_samples))
+
+    def track_contention(self, tenants: List[str]):
+        """Arm exact contended-CPU tracking for ``usage_mode="event"``
+        (call before the run; the sampled modes derive contention from
+        ``tenant_samples`` and need no arming)."""
+        if self.usage_mode != "event":
+            return
+        self._contention = _ContentionTracker(tenants, self.cpu_acc.start_t)
+
+    def tenant_mean_mem(self, tenant: str) -> float:
+        """Time-averaged bound memory (Mi) for one tenant — exact step
+        function mean, ``usage_mode="event"`` only (the sampled modes
+        never tracked per-tenant memory)."""
+        acc = self.tenant_mem_accs.get(tenant)
+        if acc is None:
+            return 0.0
+        self._close_accs()
+        return acc.mean()
+
     def contended_cpu(self, tenants: List[str]) -> Dict[str, float]:
         """Time-averaged bound CPU (milli-cores) per tenant over the
-        samples where ALL the given tenants hold resources — i.e. while
-        they actually contend. Empty dict if they never overlapped."""
+        window where ALL the given tenants hold resources — i.e. while
+        they actually contend. Empty dict if they never overlapped.
+        In event mode reads the exact tracker armed by
+        ``track_contention``; otherwise filters the 0.5 s samples."""
+        if self.usage_mode == "event":
+            if self._contention is None or \
+                    set(tenants) - set(self._contention.tenants):
+                raise RuntimeError(
+                    "contended_cpu in usage_mode='event' needs "
+                    "track_contention(tenants) armed before the run")
+            return self._contention.means()
         window = [s for _, s in self.tenant_samples
                   if all(s.get(t) for t in tenants)]
         if not window:
@@ -392,5 +499,20 @@ class MetricsCollector:
                                   if lifecycles else float("nan")),
                 "admission_deferrals":
                     float(self.admission_deferrals.get(tenant, 0)),
+                "quota_rejects": float(self.quota_rejects.get(tenant, 0)),
+                "preempted": float(sum(r.preempted for r in recs)),
             }
+            # per-stream SLO: deadline hit-rate over *completed* runs
+            # (failed/unfinished workflows are neither hit nor miss —
+            # they surface in "failed"); submission -> teardown wall
+            deadline = self.tenant_deadlines.get(tenant, 0.0)
+            if deadline > 0:
+                hits = sum(
+                    1 for r in done
+                    if r.submitted_at >= 0
+                    and r.ns_deleted - r.submitted_at <= deadline + 1e-9)
+                out[tenant]["deadline_s"] = deadline
+                out[tenant]["deadline_hits"] = float(hits)
+                out[tenant]["deadline_hit_rate"] = (
+                    hits / len(done) if done else float("nan"))
         return out

@@ -1,4 +1,4 @@
-"""Resource gathering & allocation (§4.3) + multi-tenant admission.
+"""Resource gathering & allocation (§4.3) + the admission pipeline driver.
 
 ``ResourceGatherer`` is the paper's module: it reads NodeLister/
 PodLister from the informer cache (never the apiserver), computes
@@ -13,65 +13,58 @@ many concurrent task pods as the cluster can hold instead of flooding
 the scheduler queue.
 
 ``AdmissionArbiter`` promotes that stateless gate into the control
-plane's shared admission point. Concurrent workflows from many tenants
-contend for the same headroom, so the arbiter adds:
+plane's shared admission point, now a thin driver over the staged
+pipeline in ``repro.core.policy`` (ISSUE 4):
 
-* a pending queue of not-yet-admitted (workflow, task) requests,
-  re-evaluated whenever a pod frees resources — a starved workflow is
-  woken by *any* tenant's completions, not only its own;
-* a reservation ledger for pods granted but not yet visible in the
-  informer cache (the watch+informer latency window), preventing two
-  workflows from double-spending the same headroom;
-* pluggable admission policies (``ADMISSION_POLICIES``):
+    QueueOrder   fifo / priority / fair-share / drf plugins own their
+                 specialized O(1)-ish walk structures (policy/ordering)
+    Filter       hard per-tenant quota caps (policy/filters), consulted
+                 inside the walks, inert until a cap is registered
+    Reserve      the reservation ledger closing the informer-latency
+                 double-spend window (policy/reservations)
+    Permit       grant bookkeeping — ``_create_bookkeep`` fires the
+                 engine callback and updates tenant counters
+    Preempt      starvation-triggered eviction of lower-priority
+                 RUNNING pods (policy/preemption), armed by the
+                 ``preempt`` preset
 
-    fifo        arrival order (paper-equivalent for one stream)
-    priority    higher tenant priority first, FIFO within a class
-    fair-share  weighted max-min: grant to the tenant with the lowest
-                in-use-cpu / weight ratio first
-
-Tenants are registered with ``set_tenant(name, priority=, weight=)``;
-unregistered tenants get priority 0 / weight 1.
-
-Scale-out evaluation (ISSUE 2): the generic re-sort-everything loop
-(`_evaluate_generic`, kept as reference and as the path for custom
-policies) is O(P log P) per wake-up — ruinous at a 1000-workflow
-backlog where every pod completion re-evaluates thousands of pending
-requests. The built-in policies run specialized walks that reproduce
-the generic loop's grant sequence EXACTLY (same order, same deferral
-counts — pinned by tests/test_scale_core.py):
-
-* fifo        walks the seq-ordered pending dict directly (no copy);
-* priority    walks a bisect-maintained (-priority, seq) list and stops
-              once a blocked higher class makes further grants illegal;
-* fair-share  lazily merges per-tenant FIFO queues through a heap keyed
-              (usage/weight, seq), identical to sorting every request;
-
-all three stop early when remaining headroom is below the smallest
-pending request (tracked by value-count multisets), so a saturated
-evaluate is O(1) instead of O(P). ``requested()`` reads the pod
-informer's running aggregates instead of scanning its cache, and
-``allocatable()`` is cached on the node informer's generation.
-
-10k-workflow tier (ISSUE 3): reservation reconciliation no longer
-scans the whole ledger per evaluate — only keys the informer cache
-wrote since the last sync plus reservations added since then can have
-become droppable (see ``_sync_reservations`` for the exactness
-argument), and per-tenant reserved-cpu totals make
-``tenant_usage_cpu`` O(tenants) instead of O(ledger) per fair-share
-grant round.  The arbiter is the single consumer of the pod
-informer's ``touched`` list: exactly one arbiter per InformerSet.
+The arbiter keeps the cross-stage state the walks share: the pending
+queue (re-evaluated whenever any tenant's pod frees resources), the
+value-count multisets behind the ``_no_fit_possible`` early exit, the
+deferral ledger, and the tenant registry (``set_tenant`` now carries
+quota caps next to priority/weight).  Every scheduling decision of the
+pre-pipeline monolith is preserved bit-for-bit: the legacy policies'
+binding-sequence hashes are pinned by tests/test_scale_core.py and
+tests/test_policy_pipeline.py, and the specialized walks still match
+the generic re-sort loop (``_evaluate_generic``, kept as the reference
+and the path for custom/legacy policy objects).
 """
 from __future__ import annotations
 
-import heapq
-from bisect import bisect_left, insort
-from collections import Counter, deque
-from dataclasses import dataclass
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.cluster import FAILED, PENDING, RUNNING, SUCCEEDED
+from repro.core.cluster import PENDING, RUNNING
 from repro.core.dag import Task
 from repro.core.informer import InformerSet
+from repro.core.policy import (POLICY_PRESETS, AdmissionRequest,
+                               DominantShareOrder, FairShareOrder, FifoOrder,
+                               PipelineSpec, Preemptor, PriorityOrder,
+                               QueueOrder, ReservationLedger, TenantQuotaFilter,
+                               TenantShare, make_order, resolve_policy)
+
+# legacy aliases: the monolith's policy classes live on as the ordering
+# plugins (same names importable from here, same three-entry registry —
+# new names live in repro.core.policy.QUEUE_ORDERS / POLICY_PRESETS)
+FifoPolicy = FifoOrder
+PriorityPolicy = PriorityOrder
+FairSharePolicy = FairShareOrder
+
+ADMISSION_POLICIES = {
+    "fifo": FifoOrder,
+    "priority": PriorityOrder,
+    "fair-share": FairShareOrder,
+}
 
 
 class ResourceGatherer:
@@ -128,234 +121,128 @@ class ResourceGatherer:
         return out
 
 
-# ---------------------------------------------------------------------------
-# admission requests + tenant accounting
-# ---------------------------------------------------------------------------
-@dataclass
-class AdmissionRequest:
-    namespace: str
-    tenant: str
-    task: Task
-    create: Callable[[Task], None]
-    seq: int
-    cpu: int = 0                   # cached task.resource_request()
-    mem: int = 0
-    deferred: bool = False
-
-    def key(self) -> Tuple[str, str]:
-        return (self.namespace, self.task.id)
-
-
-@dataclass
-class TenantShare:
-    priority: int = 0
-    weight: float = 1.0
-    granted: int = 0               # pods admitted over the run
-    deferred: int = 0              # requests that had to wait at least once
-
-
-# ---------------------------------------------------------------------------
-# policies: given the pending set, pick the next request to consider
-# ---------------------------------------------------------------------------
-class FifoPolicy:
-    name = "fifo"
-
-    def order(self, pending: List[AdmissionRequest],
-              arbiter: "AdmissionArbiter") -> List[AdmissionRequest]:
-        return sorted(pending, key=lambda r: r.seq)
-
-    def may_backfill(self, blocked: AdmissionRequest,
-                     candidate: AdmissionRequest,
-                     arbiter: "AdmissionArbiter") -> bool:
-        # FIFO is work-conserving: smaller later tasks may slip past a
-        # blocked one (the paper gatherer's greedy behaviour)
-        return True
-
-
-class PriorityPolicy:
-    name = "priority"
-
-    def order(self, pending: List[AdmissionRequest],
-              arbiter: "AdmissionArbiter") -> List[AdmissionRequest]:
-        def rank(r: AdmissionRequest):
-            return (-arbiter.tenant(r.tenant).priority, r.seq)
-        return sorted(pending, key=rank)
-
-    def may_backfill(self, blocked: AdmissionRequest,
-                     candidate: AdmissionRequest,
-                     arbiter: "AdmissionArbiter") -> bool:
-        # never jump a *higher*-priority blocked request — a stream of
-        # small low-priority tasks must not starve a big high-priority
-        # one; backfill within the same class is fine (FIFO there)
-        return (arbiter.tenant(candidate.tenant).priority
-                >= arbiter.tenant(blocked.tenant).priority)
-
-
-class FairSharePolicy:
-    """Weighted max-min: most-underserved tenant (in-use cpu / weight)
-    goes first; FIFO inside a tenant."""
-
-    name = "fair-share"
-
-    def order(self, pending: List[AdmissionRequest],
-              arbiter: "AdmissionArbiter") -> List[AdmissionRequest]:
-        usage = arbiter.tenant_usage_cpu()
-
-        def rank(r: AdmissionRequest):
-            share = arbiter.tenant(r.tenant)
-            return (usage.get(r.tenant, 0) / max(share.weight, 1e-9), r.seq)
-        return sorted(pending, key=rank)
-
-    def may_backfill(self, blocked: AdmissionRequest,
-                     candidate: AdmissionRequest,
-                     arbiter: "AdmissionArbiter") -> bool:
-        return True
-
-    # ranking depends on per-tenant usage, which every grant changes —
-    # the arbiter must re-order after each grant (fifo/priority don't)
-    dynamic_order = True
-
-
-ADMISSION_POLICIES = {
-    "fifo": FifoPolicy,
-    "priority": PriorityPolicy,
-    "fair-share": FairSharePolicy,
-}
-
-
 class AdmissionArbiter(ResourceGatherer):
-    """Stateful, policy-driven admission shared by all live workflows."""
+    """Stateful, policy-driven admission shared by all live workflows —
+    the pipeline driver (stages in repro.core.policy)."""
 
     def __init__(self, informers: InformerSet, policy: str = "fifo",
-                 on_defer: Optional[Callable[[str], None]] = None):
+                 on_defer: Optional[Callable[[str], None]] = None,
+                 on_quota_reject: Optional[Callable[[str], None]] = None,
+                 evict: Optional[Callable[[str, str], bool]] = None,
+                 preempt: Optional[bool] = None,
+                 preempt_cooldown_s: float = 5.0):
         super().__init__(informers)
-        if isinstance(policy, str):
-            policy = ADMISSION_POLICIES[policy]()
-        self.policy = policy
+        spec = resolve_policy(policy)
+        self.order_plugin = make_order(spec).bind(self)
+        # back-compat alias: the order plugin carries the old policy
+        # object's order()/may_backfill() surface
+        self.policy = self.order_plugin
+        self.filters = [TenantQuotaFilter().bind(self)]
+        self.ledger = ReservationLedger()
+        if preempt is None:
+            preempt = isinstance(spec, PipelineSpec) and spec.preempt
+        self.preemptor = (Preemptor(cooldown_s=preempt_cooldown_s).bind(self)
+                          if preempt else None)
+        self.evict = evict
         self.on_defer = on_defer
+        self.on_quota_reject = on_quota_reject
         self.pending: Dict[Tuple[str, str], AdmissionRequest] = {}
-        # (ns, pod name) -> (tenant, cpu, mem, reserved_at)
-        self.reserved: Dict[Tuple[str, str], Tuple[str, int, int, float]] = {}
         self.tenants: Dict[str, TenantShare] = {}
         self.admitted = 0
         self.deferrals = 0
-        self.max_pending = 0           # peak admission-queue depth
+        self.quota_rejects = 0
+        self.preemptions = 0               # RUNNING pods evicted
+        self.preemption_log: List[dict] = []
+        self.max_pending = 0               # peak admission-queue depth
         self._seq = 0
-        self._reserved_cpu = 0
-        self._reserved_mem = 0
-        self._reserved_cpu_by_tenant: Dict[str, int] = {}
-        self._fresh_reserved: List[Tuple[str, str]] = []   # since last sync
+        self._quota_active = False         # any tenant with a cap?
         self._fresh: List[AdmissionRequest] = []   # not yet deferral-checked
         self._min_cpu = Counter()      # value -> count over pending requests
         self._min_mem = Counter()
-        # priority: (-tenant priority, seq, request), bisect-sorted
-        self._prio_order: List[Tuple[int, int, AdmissionRequest]] = []
-        # fair-share: per-tenant FIFO of requests (lazy-deleted)
-        self._by_tenant: Dict[str, Deque[AdmissionRequest]] = {}
-        # subclasses may override order()/may_backfill(): only the exact
-        # built-in types take the specialized walks
-        self._fast = type(self.policy) in (FifoPolicy, PriorityPolicy,
-                                           FairSharePolicy)
+        # only plugins with a specialized walk take the fast path;
+        # legacy order/may_backfill objects run the generic loop
+        self._fast = callable(getattr(self.order_plugin, "walk", None))
 
     # -- tenant registry ----------------------------------------------------
-    def set_tenant(self, name: str, priority: int = 0, weight: float = 1.0):
-        self.tenants[name] = TenantShare(priority=priority, weight=weight)
+    def set_tenant(self, name: str, priority: int = 0, weight: float = 1.0,
+                   quota_cpu_m: int = 0, quota_mem_mi: int = 0):
+        self.tenants[name] = TenantShare(priority=priority, weight=weight,
+                                         quota_cpu_m=quota_cpu_m,
+                                         quota_mem_mi=quota_mem_mi)
+        if quota_cpu_m or quota_mem_mi:
+            self._quota_active = True
 
     def tenant(self, name: str) -> TenantShare:
         if name not in self.tenants:
             self.tenants[name] = TenantShare()
         return self.tenants[name]
 
-    # -- accounting ---------------------------------------------------------
-    def _sync_reservations(self):
-        """Drop reservations for pods the informer now sees as
-        non-terminal — from that point ``requested()`` accounts for
-        them. (A FAILED/SUCCEEDED cache entry can be a *previous*
-        incarnation of a retried pod name, so it doesn't count.)
-
-        Only candidate keys are checked instead of the whole ledger:
-        a reservation can become droppable only if its cache entry was
-        written since the last sync (``informer.touched``) or it was
-        added since then (``_fresh_reserved``) — any key already
-        checked and kept, with an untouched cache entry, would be kept
-        again. Exactly the full scan's drop set, at O(changes) cost
-        (the full ledger scan per evaluate dominated the 10k-workflow
-        admission profile)."""
-        pods = self.inf.pods
-        touched = pods.touched
-        fresh = self._fresh_reserved
-        reserved = self.reserved
-        if not reserved:
-            if touched:
-                touched.clear()
-            if fresh:
-                fresh.clear()
-            return
-        cache = pods.cache
-        for candidates in (touched, fresh):
-            for key in candidates:
-                held = reserved.get(key)
-                if held is None:
-                    continue
-                pod = cache.get(key)
-                if pod is not None and pod.phase in (PENDING, RUNNING):
-                    del reserved[key]
-                    self._reserved_cpu -= held[1]
-                    self._reserved_mem -= held[2]
-                    self._tenant_unreserve(held[0], held[1])
-        if touched:
-            touched.clear()
-        if fresh:
-            fresh.clear()
-
-    def _tenant_unreserve(self, tenant: str, cpu: int):
-        by = self._reserved_cpu_by_tenant
-        left = by[tenant] - cpu
-        if left:
-            by[tenant] = left
-        else:
-            del by[tenant]
+    # -- Reserve stage ------------------------------------------------------
+    @property
+    def reserved(self):
+        return self.ledger.reserved
 
     def reserve(self, namespace: str, name: str, tenant: str,
                 cpu: int, mem: int):
         """Charge headroom for a pod whose creation is in flight but not
         yet visible in the informer cache. Engines call this for EVERY
         pod they create (granted, retried, or speculative twin), closing
-        the watch+informer latency double-spend window. The timestamp
-        lets ``pod_removed`` tell which incarnation of a reused pod name
-        a reservation belongs to."""
-        key = (namespace, name)
-        if key not in self.reserved:
-            self.reserved[key] = (tenant, cpu, mem, self.inf.pods.sim.now())
-            self._reserved_cpu += cpu
-            self._reserved_mem += mem
-            by = self._reserved_cpu_by_tenant
-            by[tenant] = by.get(tenant, 0) + cpu
-            self._fresh_reserved.append(key)
-
-    def _drop_reservation(self, key: Tuple[str, str]):
-        held = self.reserved.pop(key, None)
-        if held is not None:
-            self._reserved_cpu -= held[1]
-            self._reserved_mem -= held[2]
-            self._tenant_unreserve(held[0], held[1])
+        the watch+informer latency double-spend window."""
+        self.ledger.reserve(namespace, name, tenant, cpu, mem,
+                            self.inf.pods.sim.now())
 
     def available(self) -> Tuple[int, int]:
-        self._sync_reservations()
+        self.ledger.sync(self.inf.pods)
         ac, am = super().available()
-        return ac - self._reserved_cpu, am - self._reserved_mem
+        return ac - self.ledger.cpu, am - self.ledger.mem
 
     def tenant_usage_cpu(self) -> Dict[str, int]:
         """CPU currently held per tenant: informer-visible non-terminal
         pods plus not-yet-visible reservations (O(tenants) — the
         fair-share walk reads this once per grant round)."""
-        self._sync_reservations()
+        self.ledger.sync(self.inf.pods)
         usage = dict(self.inf.pods.nonterminal_cpu_by_tenant)
-        for tenant, cpu in self._reserved_cpu_by_tenant.items():
+        for tenant, cpu in self.ledger.cpu_by_tenant.items():
             usage[tenant] = usage.get(tenant, 0) + cpu
         return usage
 
-    # -- request lifecycle ----------------------------------------------------
+    def tenant_usage(self) -> Tuple[Dict[str, int], Dict[str, int]]:
+        """(cpu, mem) held per tenant — one reservation sync, both
+        axes; the drf walk reads this once per grant round."""
+        self.ledger.sync(self.inf.pods)
+        pods = self.inf.pods
+        cpu = dict(pods.nonterminal_cpu_by_tenant)
+        for tenant, c in self.ledger.cpu_by_tenant.items():
+            cpu[tenant] = cpu.get(tenant, 0) + c
+        mem = dict(pods.nonterminal_mem_by_tenant)
+        for tenant, m in self.ledger.mem_by_tenant.items():
+            mem[tenant] = mem.get(tenant, 0) + m
+        return cpu, mem
+
+    # -- Filter stage -------------------------------------------------------
+    def _filters_allow(self, req: AdmissionRequest) -> bool:
+        """Side-effect-free filter probe (no reject accounting)."""
+        for f in self.filters:
+            if not f.permits(req):
+                return False
+        return True
+
+    def _permits(self, req: AdmissionRequest) -> bool:
+        """Consulted by the walks at the exact point the headroom
+        fit-check passes; inert until a tenant registers a cap."""
+        if not self._quota_active:
+            return True
+        if self._filters_allow(req):
+            return True
+        if not req.quota_rejected:
+            req.quota_rejected = True
+            self.quota_rejects += 1
+            self.tenant(req.tenant).quota_rejects += 1
+            if self.on_quota_reject:
+                self.on_quota_reject(req.tenant)
+        return False
+
+    # -- request lifecycle --------------------------------------------------
     def submit(self, namespace: str, tenant: str, tasks: List[Task],
                create: Callable[[Task], None]):
         """Queue admission requests (idempotent per (namespace, task))
@@ -377,11 +264,7 @@ class AdmissionArbiter(ResourceGatherer):
         self._fresh.append(req)
         self._min_cpu[req.cpu] += 1
         self._min_mem[req.mem] += 1
-        if isinstance(self.policy, PriorityPolicy):
-            insort(self._prio_order,
-                   (-self.tenant(req.tenant).priority, req.seq, req))
-        elif isinstance(self.policy, FairSharePolicy):
-            self._by_tenant.setdefault(req.tenant, deque()).append(req)
+        self.order_plugin.on_add(req)
 
     def _counters_remove(self, req: AdmissionRequest):
         self._min_cpu[req.cpu] -= 1
@@ -393,25 +276,12 @@ class AdmissionArbiter(ResourceGatherer):
 
     def _index_remove(self, req: AdmissionRequest):
         self._counters_remove(req)
-        if isinstance(self.policy, PriorityPolicy):
-            order = self._prio_order
-            # seq is unique, so tuple comparison never reaches the
-            # request; a 2-tuple probe sorts just before its entry
-            i = bisect_left(order, (-self.tenant(req.tenant).priority,
-                                    req.seq))
-            if i < len(order) and order[i][2] is req:
-                del order[i]
-            else:   # priority changed since insert: find by identity
-                for j, entry in enumerate(order):
-                    if entry[2] is req:
-                        del order[j]
-                        break
-        # fair-share per-tenant deques are lazy-deleted during the walk
+        self.order_plugin.on_remove(req)
 
+    # -- Permit stage -------------------------------------------------------
     def _create_bookkeep(self, req: AdmissionRequest) -> bool:
         """Fire the grant callback; True when it consumed headroom (a
-        stale grant the engine declined consumes none) — identical
-        bookkeeping to the generic loop."""
+        stale grant the engine declined consumes none)."""
         if req.create(req.task) is not False:
             self.admitted += 1
             self.tenant(req.tenant).granted += 1
@@ -445,162 +315,55 @@ class AdmissionArbiter(ResourceGatherer):
                (am < min(self._min_mem) if self._min_mem else False)
 
     def evaluate(self):
-        """Grant as many pending requests as headroom (and the policy's
-        backfill rule) allows; see the module docstring for the
-        specialized walks and their equivalence to the generic loop."""
+        """Drive the pipeline once: grant as many pending requests as
+        headroom, the ordering plugin's walk, and the filters allow,
+        then mark deferrals and give the Preempt stage its shot."""
         if not self._fast:
             self._evaluate_generic()
-            self._mark_deferred()
-            return
-        # available() is called unconditionally, exactly like the
-        # generic loop: its _sync_reservations side effect must run at
-        # the same instants or reservations outlive their informer
-        # visibility window and headroom diverges
-        ac, am = self.available()
-        if self.pending:
-            if isinstance(self.policy, FairSharePolicy):
-                self._walk_fair_share(ac, am)
-            elif not self._no_fit_possible(ac, am):
-                if isinstance(self.policy, FifoPolicy):
-                    self._walk_fifo(ac, am)
-                else:
-                    self._walk_priority(ac, am)
+        else:
+            # available() is called unconditionally, exactly like the
+            # generic loop: its reservation-sync side effect must run
+            # at the same instants or reservations outlive their
+            # informer visibility window and headroom diverges
+            ac, am = self.available()
+            if self.pending:
+                self.order_plugin.walk(ac, am)
         self._mark_deferred()
-
-    # -- specialized walks (exact replicas of _evaluate_generic) ------------
-    def _walk_fifo(self, ac: int, am: int):
-        # generic fifo: one pass in seq order, always-backfill — i.e.
-        # first-fit down the queue. The pending dict IS seq-ordered, so
-        # walk it directly; pending deletion is deferred past the loop
-        # (grants never mutate the dict — verified: the engine's create
-        # path only schedules sim events and charges reservations).
-        grants: List[AdmissionRequest] = []
-        for req in self.pending.values():
-            if req.cpu <= ac and req.mem <= am:
-                grants.append(req)
-                self._counters_remove(req)
-                if self._create_bookkeep(req):
-                    ac -= req.cpu
-                    am -= req.mem
-                    if self._no_fit_possible(ac, am):
-                        break      # nothing further can fit
-        for req in grants:
-            del self.pending[req.key()]
-
-    def _walk_priority(self, ac: int, am: int):
-        # generic priority: one pass in (-priority, seq) order; a
-        # blocked request bars every strictly-lower class behind it, so
-        # the walk may stop at the first lower class after a block.
-        order = self._prio_order
-        grants: List[AdmissionRequest] = []
-        max_blocked_prio: Optional[int] = None
-        i = 0
-        while i < len(order):
-            req = order[i][2]
-            if self.pending.get(req.key()) is not req:
-                del order[i]       # ghost entry from a priority change
-                continue
-            prio = self.tenant(req.tenant).priority
-            if max_blocked_prio is not None and prio < max_blocked_prio:
-                break              # all remaining are lower still
-            if req.cpu <= ac and req.mem <= am:
-                del order[i]
-                grants.append(req)
-                self._counters_remove(req)
-                if self._create_bookkeep(req):
-                    ac -= req.cpu
-                    am -= req.mem
-                    if self._no_fit_possible(ac, am):
-                        break
-                continue           # entries shifted left: same index
-            if max_blocked_prio is None or prio > max_blocked_prio:
-                max_blocked_prio = prio
-            i += 1
-        for req in grants:
-            del self.pending[req.key()]
-
-    def _walk_fair_share(self, ac: int, am: int):
-        # generic fair-share re-sorts all requests by (usage/weight,
-        # seq) and grants the first fit, once per grant. The lazy merge
-        # over per-tenant FIFO queues pops requests in exactly that
-        # order (seq ties across equal-ratio tenants included) without
-        # materializing it.
-        pending = self.pending
-        while True:
-            if not pending:
-                return
-            # one sync per round, mirroring the generic loop's order()
-            # call at the top of every pass (final no-grant pass too)
-            usage = self.tenant_usage_cpu()
-            if self._no_fit_possible(ac, am):
-                return
-            heap = []
-            for tenant, q in self._by_tenant.items():
-                while q and pending.get(q[0].key()) is not q[0]:
-                    q.popleft()    # granted/forgotten leftovers
-                if q:
-                    share = self.tenant(tenant)
-                    ratio = usage.get(tenant, 0) / max(share.weight, 1e-9)
-                    heap.append((ratio, q[0].seq, tenant, 0))
-            if not heap:
-                return
-            heapq.heapify(heap)
-            granted = False
-            while heap:
-                ratio, _seq, tenant, idx = heapq.heappop(heap)
-                q = self._by_tenant[tenant]
-                req = q[idx]       # push-time staleness check keeps
-                if req.cpu <= ac and req.mem <= am:   # entries live
-                    if self._grant(req):
-                        ac -= req.cpu
-                        am -= req.mem
-                    granted = True
-                    break          # re-rank with the new usage
-                nxt = idx + 1
-                while nxt < len(q) and pending.get(q[nxt].key()) is not q[nxt]:
-                    nxt += 1
-                if nxt < len(q):
-                    heapq.heappush(heap, (ratio, q[nxt].seq, tenant, nxt))
-            if not granted:
-                return
+        if self.preemptor is not None:
+            self.preemptor.maybe_preempt()
 
     # -- generic loop (reference + custom-policy path) -----------------------
     def _evaluate_generic(self):
         ac, am = self.available()
-        dynamic = getattr(self.policy, "dynamic_order", False)
+        policy = self.order_plugin
+        dynamic = getattr(policy, "dynamic_order", False)
         progress = True
         while progress and self.pending:
             progress = False
             blocked: List[AdmissionRequest] = []
-            for req in self.policy.order(list(self.pending.values()), self):
+            for req in policy.order(list(self.pending.values()), self):
                 cpu, mem = req.task.resource_request()
-                if (cpu <= ac and mem <= am
-                        and all(self.policy.may_backfill(b, req, self)
-                                for b in blocked)):
-                    if self._grant(req):
-                        ac -= cpu
-                        am -= mem
-                    progress = True
-                    if dynamic:
-                        break          # re-rank with the new usage
-                else:
-                    blocked.append(req)
+                if cpu <= ac and mem <= am:
+                    if not self._permits(req):
+                        continue   # capped: skips, never bars others
+                    if all(policy.may_backfill(b, req, self)
+                           for b in blocked):
+                        if self._grant(req):
+                            ac -= cpu
+                            am -= mem
+                        progress = True
+                        if dynamic:
+                            break  # re-rank with the new usage
+                        continue
+                blocked.append(req)
             if not dynamic:
-                break                  # one sorted pass granted all that fit
+                break              # one sorted pass granted all that fit
 
     def pod_removed(self, pod):
-        """A pod freed resources: drop its reservation (if still held)
-        and wake pending requests of every tenant.
-
-        A retried pod can be re-created under the same name *before*
-        the old incarnation's DELETED event reaches the informer; the
-        reservation timestamp tells the incarnations apart — a
-        reservation made after the removed pod was created belongs to
-        the replacement and must survive."""
-        key = (pod.namespace, pod.name)
-        held = self.reserved.get(key)
-        if held is not None and held[3] <= pod.created:
-            self._drop_reservation(key)
+        """A pod freed resources: drop its reservation (if still held —
+        unless it belongs to a newer incarnation of a reused name) and
+        wake pending requests of every tenant."""
+        self.ledger.release_if_current((pod.namespace, pod.name), pod.created)
         if self.pending:
             self.evaluate()
 
@@ -608,5 +371,4 @@ class AdmissionArbiter(ResourceGatherer):
         for key in [k for k in self.pending if k[0] == namespace]:
             req = self.pending.pop(key)
             self._index_remove(req)
-        for key in [k for k in self.reserved if k[0] == namespace]:
-            self._drop_reservation(key)
+        self.ledger.drop_namespace(namespace)

@@ -16,8 +16,10 @@ Architecture (multi-tenant control plane):
 ``ControlPlane`` composes sim/cluster/informers/events/volumes/metrics/
 engine/gateway for any engine and exposes the tenancy knobs: call
 ``add_stream`` once per tenant workload (arrival mode, concurrency,
-Poisson rate, priority, fair-share weight), pick an admission policy
-(``fifo`` / ``priority`` / ``fair-share``), then ``run``.
+Poisson rate, priority, fair-share weight, hard quota caps, SLO
+deadline), pick an admission policy (``fifo`` / ``priority`` /
+``fair-share`` / ``drf`` / ``quota`` / ``preempt`` — see
+repro.core.policy), then ``run``.
 
 ``run_experiment`` keeps the original one-workflow signature — it is a
 ControlPlane with a single default-tenant serial stream, which is
@@ -37,7 +39,8 @@ from repro.core.events import EventRegistry
 from repro.core.informer import InformerSet
 from repro.core.injector import StreamSpec, WorkflowGateway
 from repro.core.metrics import MetricsCollector
-from repro.core.resources import ADMISSION_POLICIES, AdmissionArbiter
+from repro.core.policy import POLICY_PRESETS
+from repro.core.resources import AdmissionArbiter
 from repro.core.schedulers import SCHEDULERS
 from repro.core.sim import Sim
 from repro.core.volumes import VolumeManager
@@ -80,9 +83,9 @@ class ControlPlane:
         if engine_name not in ENGINES:
             raise ValueError(f"unknown engine {engine_name!r}; "
                              f"expected one of {sorted(ENGINES)}")
-        if admission_policy not in ADMISSION_POLICIES:
+        if admission_policy not in POLICY_PRESETS:
             raise ValueError(f"unknown admission policy {admission_policy!r}; "
-                             f"expected one of {sorted(ADMISSION_POLICIES)}")
+                             f"expected one of {sorted(POLICY_PRESETS)}")
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}; "
                              f"expected one of {sorted(SCHEDULERS)}")
@@ -106,7 +109,10 @@ class ControlPlane:
                                         batched=self.cluster.lifecycle == "fast")
             self.arbiter = AdmissionArbiter(
                 self.informers, policy=admission_policy,
-                on_defer=self.metrics.note_admission_deferred)
+                on_defer=self.metrics.note_admission_deferred,
+                on_quota_reject=self.metrics.note_quota_reject,
+                evict=self.cluster.evict_pod,
+                preempt_cooldown_s=params.preempt_cooldown_s)
             self.engine = KubeAdaptorEngine(
                 self.sim, self.cluster, self.informers, self.events,
                 self.volumes, self.metrics, params,
@@ -125,12 +131,25 @@ class ControlPlane:
     def add_stream(self, workflow: Workflow, repeats: int = 1,
                    tenant: str = "default", arrival: str = "serial",
                    concurrency: int = 1, rate: float = 1.0, burst: int = 1,
-                   priority: int = 0, weight: float = 1.0) -> StreamSpec:
+                   priority: int = 0, weight: float = 1.0,
+                   quota_cpu_m: int = 0, quota_mem_mi: int = 0,
+                   deadline_s: float = 0.0) -> StreamSpec:
+        """Register one tenant workload.  ``quota_cpu_m``/``quota_mem_mi``
+        are hard admission caps (0 = uncapped) enforced by the pipeline's
+        Filter stage; ``deadline_s`` is the tenant's SLO — a completed
+        workflow *hits* when submission->teardown stays within it
+        (tracked per tenant by MetricsCollector, 0 = no SLO)."""
         spec = StreamSpec(workflow=workflow, repeats=repeats, tenant=tenant,
                           arrival=arrival, concurrency=concurrency, rate=rate,
-                          burst=burst, priority=priority, weight=weight)
+                          burst=burst, priority=priority, weight=weight,
+                          quota_cpu_m=quota_cpu_m, quota_mem_mi=quota_mem_mi,
+                          deadline_s=deadline_s)
         if self.arbiter is not None:
-            self.arbiter.set_tenant(tenant, priority=priority, weight=weight)
+            self.arbiter.set_tenant(tenant, priority=priority, weight=weight,
+                                    quota_cpu_m=quota_cpu_m,
+                                    quota_mem_mi=quota_mem_mi)
+        if deadline_s > 0:
+            self.metrics.set_tenant_deadline(tenant, deadline_s)
         return self.gateway.add_stream(spec)
 
     def add_trace(self, records, tenants: Optional[dict] = None, make=None):
@@ -153,11 +172,17 @@ class ControlPlane:
                         topo, get_workflow_spec(topo))
                 return wfb
 
-        if tenants and self.arbiter is not None:
+        if tenants:
             for name, share in tenants.items():
-                self.arbiter.set_tenant(
-                    name, priority=int(share.get("priority", 0)),
-                    weight=float(share.get("weight", 1.0)))
+                if self.arbiter is not None:
+                    self.arbiter.set_tenant(
+                        name, priority=int(share.get("priority", 0)),
+                        weight=float(share.get("weight", 1.0)),
+                        quota_cpu_m=int(share.get("quota_cpu_m", 0)),
+                        quota_mem_mi=int(share.get("quota_mem_mi", 0)))
+                if float(share.get("deadline_s", 0.0)) > 0:
+                    self.metrics.set_tenant_deadline(
+                        name, float(share["deadline_s"]))
         return self.gateway.load_trace(records, make)
 
     # -- execution -----------------------------------------------------------
