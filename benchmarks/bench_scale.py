@@ -1,5 +1,6 @@
-"""Scale-out stress tiers: 1000-wf/100-node and 10k-wf/1000-node runs
-through the multi-tenant ControlPlane (ROADMAP scale track).
+"""Scale-out stress tiers: 1000-wf/100-node, 10k-wf/1000-node and
+100k-wf/1000-node runs through the multi-tenant ControlPlane (ROADMAP
+scale track).
 
 Eight streams (two tenants per paper topology) drive the full
 KubeAdaptor stack — gateway, admission arbiter, informers, disordered
@@ -17,21 +18,35 @@ benchmarks/README.md).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_scale \
-        [--workflows 1000] [--nodes 100] [--tiers 1000x100,10000x1000] \
+        [--workflows 1000] [--nodes 100] \
+        [--tiers 1000x100,10000x1000,100000x1000] \
         [--seed 42] [--policies fifo,priority,fair-share,drf,quota,preempt] \
         [--queue calendar|heap] [--usage-mode event|sampled] \
         [--lifecycle fast|chained] [--trace examples/trace_mixed.json] \
-        [--out BENCH_scale.json] [--budget-s 0] \
-        [--min-events-per-sec 0] [--max-events-per-pod 0]
+        [--out BENCH_scale.json] [--budget-s 0] [--profile] \
+        [--min-events-per-sec 0] [--max-events-per-pod 0] \
+        [--max-peak-rss-mib 0]
 
 ``--budget-s`` exits 2 when total wall time exceeds the budget;
-``--min-events-per-sec`` / ``--max-events-per-pod`` exit 2 when any
-run breaches the floor/ceiling — the ``bench-scale-smoke`` CI job uses
-all three so event-core regressions fail the build. ``--trace``
-replays a recorded arrival trace (see ``arrival_trace/v1`` in
-benchmarks/README.md) instead of the synthetic streams. The module's
-``run()`` (for ``benchmarks.run``) executes a reduced
-50-workflow/20-node smoke variant of the synthetic scenario.
+``--min-events-per-sec`` / ``--max-events-per-pod`` /
+``--max-peak-rss-mib`` exit 2 when any run breaches the floor/ceiling
+— the ``bench-scale-smoke`` CI job uses them so event-core and memory
+regressions fail the build (``peak_rss_mib`` is a process-lifetime
+high-water mark, so the RSS gate budgets the whole sweep).
+``--profile`` wraps each policy run in cProfile and prints the top-20
+cumulative-time hotspots, so perf PRs can cite before/after profiles
+instead of guessing. ``--trace`` replays a recorded arrival trace
+(see ``arrival_trace/v1`` in benchmarks/README.md) instead of the
+synthetic streams. The module's ``run()`` (for ``benchmarks.run``)
+executes a reduced 50-workflow/20-node smoke variant of the synthetic
+scenario.
+
+Throughput accounting (ISSUE 5): ``events_per_sec`` divides by the
+sim's event-loop wall time (``Sim.run_wall_s``, which ends at
+``last_event_t``'s event), not the full ``plane.run`` wall — plane
+setup, result assembly and post-completion drain no longer understate
+throughput on short tiers or pollute cross-tier comparisons.
+``wall_s`` stays the full run wall (the budget gate's basis).
 
 Admission-pipeline policies (ISSUE 4): ``--policies`` also accepts
 ``drf`` (dominant-resource fair share), ``quota`` (fifo ordering with
@@ -46,9 +61,11 @@ introduced are read via getattr) so speedups can be measured by
 checking out two revisions and comparing ``wall_s``.
 """
 import argparse
+import cProfile
 import inspect
 import json
 import platform
+import pstats
 import resource
 import sys
 import time
@@ -72,7 +89,7 @@ BATCH_DEADLINE_S = 3600.0
 # (sum over the 8 streams = 120%, so caps genuinely bind under load)
 PROD_QUOTA_FRAC = 0.20
 BATCH_QUOTA_FRAC = 0.10
-SCHEMA = "bench_scale/v2"
+SCHEMA = "bench_scale/v3"
 
 
 def _plane_kwargs(usage_mode, queue, lifecycle):
@@ -141,13 +158,28 @@ def _add_stream_accepts(name):
 
 
 def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
-               usage_mode="event", queue=None, lifecycle=None, trace=None):
+               usage_mode="event", queue=None, lifecycle=None, trace=None,
+               profile=False):
     plane = build_plane(policy, n_workflows, n_nodes, seed,
                         usage_mode=usage_mode, queue=queue,
                         lifecycle=lifecycle, trace=trace)
+    try:
+        import repro.core.cluster as _cluster_mod
+        copies0 = _cluster_mod.SNAPSHOTS_MADE
+    except AttributeError:            # pre-zero-copy core
+        _cluster_mod, copies0 = None, 0
+    profiler = None
+    if profile:
+        profiler = cProfile.Profile()
+        profiler.enable()
     t0 = time.perf_counter()
     res = plane.run(horizon_s=horizon_s)
     wall = time.perf_counter() - t0
+    if profiler is not None:
+        profiler.disable()
+        print(f"--- profile [{n_workflows}wf/{n_nodes}n {policy}] "
+              f"top-20 by cumulative time ---", flush=True)
+        pstats.Stats(profiler).sort_stats("cumulative").print_stats(20)
     m = res.metrics
     completed = sum(1 for r in m.workflows.values()
                     if r.ns_deleted > 0 and not r.failed)
@@ -158,12 +190,16 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
     # pre-optimization cores leave sim.t at the drain time; the current
     # core parks it at the horizon and keeps the drain in last_event_t
     makespan = getattr(res.sim, "last_event_t", res.sim.t)
+    # throughput over the event loop's own wall (ends at last_event_t's
+    # event): excludes setup/epilogue/drain — see module docstring
+    loop_wall = getattr(res.sim, "run_wall_s", 0.0) or wall
     rec = {
         "policy": policy,
         "wall_s": round(wall, 3),
+        "loop_wall_s": round(loop_wall, 3),
         "sim_makespan_s": round(makespan, 2),
         "events": events,
-        "events_per_sec": (round(events / wall) if events else None),
+        "events_per_sec": (round(events / loop_wall) if events else None),
         "pods_created": pods,
         "events_per_pod": (round(events / pods, 2)
                            if events and pods else None),
@@ -188,6 +224,11 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
     # quota/preempt sweeps land in the same schema
     rec["preemptions"] = getattr(res.arbiter, "preemptions", None)
     rec["quota_rejects"] = getattr(res.arbiter, "quota_rejects", None)
+    # scale observables (ISSUE 5): multi-grant admission rounds and the
+    # object copies the zero-copy informer views actually materialized
+    rec["grant_batches"] = getattr(res.arbiter, "grant_batches", None)
+    if _cluster_mod is not None:
+        rec["informer_copies"] = _cluster_mod.SNAPSHOTS_MADE - copies0
     slo = {t: {"deadline_s": s["deadline_s"],
                "hit_rate": (round(s["deadline_hit_rate"], 4)
                             if s["deadline_hit_rate"] == s["deadline_hit_rate"]
@@ -221,9 +262,11 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
 
 
 def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
-                 queue=None, lifecycle=None, trace=None, trace_path=None):
+                 queue=None, lifecycle=None, trace=None, trace_path=None,
+                 profile=False):
     runs = [run_policy(p, n_workflows, n_nodes, seed, usage_mode=usage_mode,
-                       queue=queue, lifecycle=lifecycle, trace=trace)
+                       queue=queue, lifecycle=lifecycle, trace=trace,
+                       profile=profile)
             for p in policies]
     scenario = {"workflows": n_workflows, "nodes": n_nodes,
                 "node_cpu_m": cal.PaperCluster.node_cpu_m,
@@ -272,8 +315,8 @@ def main():
     ap.add_argument("--workflows", type=int, default=1000)
     ap.add_argument("--nodes", type=int, default=100)
     ap.add_argument("--tiers", default="",
-                    help="comma list of WFxNODES (e.g. 1000x100,10000x1000);"
-                         " overrides --workflows/--nodes")
+                    help="comma list of WFxNODES (e.g. 1000x100,10000x1000,"
+                         "100000x1000); overrides --workflows/--nodes")
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--policies", default=",".join(POLICIES))
     ap.add_argument("--queue", default="",
@@ -292,6 +335,13 @@ def main():
                     help="fail (exit 2) if any run throughput drops below")
     ap.add_argument("--max-events-per-pod", type=float, default=0.0,
                     help="fail (exit 2) if any run exceeds this event cost")
+    ap.add_argument("--max-peak-rss-mib", type=float, default=0.0,
+                    help="fail (exit 2) if any run's peak RSS exceeds this "
+                         "(process-lifetime high-water mark: budget the "
+                         "whole sweep)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each policy run and print the top-20 "
+                         "cumulative-time hotspots")
     args = ap.parse_args()
 
     policies = [p for p in args.policies.split(",") if p]
@@ -305,7 +355,8 @@ def main():
                             usage_mode=args.usage_mode,
                             queue=args.queue or None,
                             lifecycle=args.lifecycle or None,
-                            trace=trace, trace_path=args.trace or None)
+                            trace=trace, trace_path=args.trace or None,
+                            profile=args.profile)
         tiers.append(tier)
         n_wf = tier["scenario"]["workflows"]
         for r in tier["runs"]:
@@ -348,6 +399,11 @@ def main():
                 failures.append(
                     f"EVENT-COST CEILING: {label} {r['events_per_pod']} "
                     f"events/pod > {args.max_events_per_pod:.1f}")
+            if (args.max_peak_rss_mib and r["peak_rss_mib"]
+                    and r["peak_rss_mib"] > args.max_peak_rss_mib):
+                failures.append(
+                    f"RSS CEILING: {label} {r['peak_rss_mib']} MiB "
+                    f"> {args.max_peak_rss_mib:.0f} MiB")
     if failures:
         for msg in failures:
             print(msg, file=sys.stderr)

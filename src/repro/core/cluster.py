@@ -71,6 +71,7 @@ admission without charging the retry budget.
 """
 from __future__ import annotations
 
+import ctypes
 import os
 import random
 from dataclasses import dataclass, field
@@ -84,17 +85,55 @@ from repro.core.stats import StreamingStat
 PENDING, RUNNING, SUCCEEDED, FAILED = "Pending", "Running", "Succeeded", "Failed"
 ADDED, MODIFIED, DELETED = "ADDED", "MODIFIED", "DELETED"
 
+# objects materialized by _FastCopy.snapshot()/clone() since import —
+# benchmarks report the delta per run as `informer_copies` (the copy
+# traffic the zero-copy views avoid; see ISSUE 5)
+SNAPSHOTS_MADE = 0
+
 
 class _FastCopy:
-    """Snapshot without ``copy.copy``'s reduce/dispatch machinery; the
-    watch path clones one object per notification."""
+    """Generation-stamped copy-on-write snapshots (zero-copy informer
+    views, ISSUE 5).
+
+    Every mutation of a watched object bumps its revision stamp
+    ``_rv``; ``snapshot()`` returns an immutable view of the current
+    state, materializing a copy ONLY when a field actually changed
+    since the last snapshot — consecutive snapshots of an unchanged
+    object are the SAME object, so the informer's resync reconcile,
+    its listers and its running aggregates all read shared structures
+    instead of per-call clones.  A handed-out snapshot is never
+    mutated again (the next mutation bumps ``_rv`` and the next
+    snapshot materializes fresh), which preserves the PR-2 guarantee
+    that no handler or lister caller can observe future live-object
+    state — pinned by tests/test_informer_views.py.
+
+    Code outside cluster.py that mutates a watched field directly must
+    bump ``obj._rv`` itself (the cluster's own mutation points all
+    do).
+    """
+
+    _rv = 0                        # revision stamp (bumped per mutation)
+    _snap = None                   # cached snapshot of revision _snap._rv
 
     def __copy__(self):
+        global SNAPSHOTS_MADE
+        SNAPSHOTS_MADE += 1
         new = object.__new__(type(self))
-        new.__dict__.update(self.__dict__)
+        d = new.__dict__
+        d.update(self.__dict__)
+        d.pop("_snap", None)       # snapshots never chain to older ones
         return new
 
     clone = __copy__
+
+    def snapshot(self):
+        """The current state as an immutable shared view (copy-on-write)."""
+        snap = self._snap
+        if snap is not None and snap._rv == self._rv:
+            return snap
+        snap = self.__copy__()
+        self._snap = snap
+        return snap
 
 
 @dataclass
@@ -124,6 +163,12 @@ class PodObj(_FastCopy):
     payload: Optional[Callable[[], Any]] = None
     volume: Optional[str] = None       # PVC name (mount adds latency)
     labels: Dict[str, str] = field(default_factory=dict)
+    tenant: str = "default"            # denormalized labels["tenant"] —
+    #                                    read on every bind/release/track
+
+    def __post_init__(self):
+        if self.tenant == "default" and self.labels:
+            self.tenant = self.labels.get("tenant", "default")
     phase: str = PENDING
     node: Optional[str] = None
     created: float = 0.0
@@ -151,11 +196,16 @@ class PVCObj(_FastCopy):
     created: float = 0.0
 
 
-@dataclass
 class WatchEvent:
-    kind: str        # "pod" | "node" | "namespace" | "pvc"
-    type: str        # ADDED | MODIFIED | DELETED
-    obj: Any
+    """One watch-stream record (``__slots__``: allocated per event on
+    the hot pod-lifecycle path)."""
+
+    __slots__ = ("kind", "type", "obj")
+
+    def __init__(self, kind: str, type: str, obj: Any):
+        self.kind = kind     # "pod" | "node" | "namespace" | "pvc"
+        self.type = type     # ADDED | MODIFIED | DELETED
+        self.obj = obj
 
 
 class Cluster:
@@ -173,6 +223,7 @@ class Cluster:
                              f"expected 'fast' or 'chained'")
         self.lifecycle = lifecycle
         self._fast = lifecycle == "fast"
+        self._watch_lat = params.watch_latency   # hoisted: read per notify
         self.payload_mode = payload_mode
         self.rng = random.Random(seed)
         # sole consumer of self.rng (see shuffle.py buffering contract)
@@ -182,8 +233,12 @@ class Cluster:
         self.pods: Dict[Tuple[str, str], PodObj] = {}
         self.namespaces: Dict[str, NamespaceObj] = {}
         self.pvcs: Dict[Tuple[str, str], PVCObj] = {}
+        # per-namespace pvc keys: the teardown cascade and namespaced
+        # lists must not scan every live workflow's volume
+        self._pvcs_by_ns: Dict[str, List[Tuple[str, str]]] = {}
         self._watchers: Dict[str, List[Callable[[WatchEvent], None]]] = {}
         self._batch_watchers: Dict[str, List[Callable]] = {}
+        self._watched: Dict[str, bool] = {}   # any watcher of this kind?
         # kind -> (delivery time, events) for the open same-instant batch
         self._watch_buf: Dict[str, Tuple[float, List[WatchEvent]]] = {}
         self._sched_scheduled = False
@@ -207,7 +262,6 @@ class Cluster:
         self._node_seq: List[NodeObj] = list(self.nodes.values())
         self._node_perm = self._shuffler.make_perm(len(self._node_seq))
         if self._shuffler.has_native_cycle:
-            import ctypes
             n = len(self._node_seq)
             # free-capacity mirrors of the node objects, maintained
             # incrementally at bind/release/fail/restore (absolute
@@ -216,16 +270,16 @@ class Cluster:
             # refill dominated the 1000-node scheduler profile
             self._c_free_cpu = (ctypes.c_int32 * n)()
             self._c_free_mem = (ctypes.c_int32 * n)()
-            self._c_ready = bytearray(n)
+            self._c_ready = (ctypes.c_uint8 * n)()
             self._node_idx: Dict[str, int] = {}
             for i, node in enumerate(self._node_seq):
                 self._c_free_cpu[i] = node.cpu_alloc - node.cpu_used
                 self._c_free_mem[i] = node.mem_alloc - node.mem_used
                 self._c_ready[i] = node.ready
                 self._node_idx[node.name] = i
-            self._c_state = (ctypes.c_long * 2)()
             self._c_pod_cap = 0
             self._c_pod_cpu = self._c_pod_mem = self._c_bind = None
+            self._c_pod_perm = None
         else:
             self._c_free_cpu = None
         self.max_pending_pods = 0            # peak unbound-pod queue depth
@@ -239,21 +293,24 @@ class Cluster:
     # ---- watch ---------------------------------------------------------
     def watch(self, kind: str, cb: Callable[[WatchEvent], None]):
         self._watchers.setdefault(kind, []).append(cb)
+        self._watched[kind] = True
 
     def watch_batch(self, kind: str, cb: Callable[[List[WatchEvent]], None]):
         """Batched stream: one callback per delivery instant with every
         event of ``kind`` that became due at that instant (informers use
         this; per-event ``watch`` remains for simple consumers)."""
         self._batch_watchers.setdefault(kind, []).append(cb)
+        self._watched[kind] = True
 
     def _notify(self, kind: str, type_: str, obj: Any):
-        if kind not in self._watchers and kind not in self._batch_watchers:
+        if kind not in self._watched:
             return
         # snapshot the object version at event time (like a real watch
         # stream's resourceVersion) — consumers must not see later state;
-        # one snapshot per notification, shared by all watchers
-        ev = WatchEvent(kind, type_, obj.clone())
-        due = self.sim.t + self.p.watch_latency
+        # copy-on-write: consecutive notifications of an unchanged object
+        # (and resync list reads) share one materialized view
+        ev = WatchEvent(kind, type_, obj.snapshot())
+        due = self.sim.t + self._watch_lat
         buf = self._watch_buf.get(kind)
         if buf is not None and buf[0] == due:
             buf[1].append(ev)
@@ -294,11 +351,12 @@ class Cluster:
             ns = self.namespaces.pop(name, None)
             if ns is not None:
                 ns.deleted = self.sim.now()
+                ns._rv += 1
                 # cascade: pods + pvcs in the namespace
                 for pod in list(self._pods_by_ns.get(name, {}).values()):
                     self._remove_pod(pod)
-                for key in [k for k in self.pvcs if k[0] == name]:
-                    del self.pvcs[key]
+                for key in self._pvcs_by_ns.pop(name, ()):
+                    self.pvcs.pop(key, None)
                 self._notify("namespace", DELETED, ns)
             if cb:
                 cb(ns)
@@ -312,13 +370,17 @@ class Cluster:
             pvc = self.pvcs.get((namespace, name))
             if pvc is not None:
                 pvc.bound = True
+                pvc._rv += 1
                 self._notify("pvc", MODIFIED, pvc)
                 if cb:
                     cb(pvc)
 
         def do():
             pvc = PVCObj(name, namespace, created=self.sim.now())
-            self.pvcs[(namespace, name)] = pvc
+            key = (namespace, name)
+            if key not in self.pvcs:     # re-create: index entry exists
+                self._pvcs_by_ns.setdefault(namespace, []).append(key)
+            self.pvcs[key] = pvc
             self._notify("pvc", ADDED, pvc)
             # dynamic provisioning (StorageClass + NFS provisioner pod)
             self.sim.after(self.p.pvc_create_latency, bound)
@@ -434,6 +496,7 @@ class Cluster:
             return
         self._release(pod)
         pod.deleted = self.sim.now()
+        pod._rv += 1
         del self.pods[key]
         self._pending_pods.pop(key, None)
         ns_map = self._pods_by_ns.get(pod.namespace)
@@ -452,14 +515,16 @@ class Cluster:
             n = self.nodes[pod.node]
             n.cpu_used -= pod.cpu_m
             n.mem_used -= pod.mem_mi
+            n._rv += 1
             pod._holding = False
+            pod._rv += 1
             if self._c_free_cpu is not None:
                 i = self._node_idx[n.name]
                 self._c_free_cpu[i] = n.cpu_alloc - n.cpu_used
                 self._c_free_mem[i] = n.mem_alloc - n.mem_used
             self.cpu_in_use -= pod.cpu_m
             self.mem_in_use -= pod.mem_mi
-            tenant = pod.labels.get("tenant", "default")
+            tenant = pod.tenant
             self.tenant_holding_cpu[tenant] -= pod.cpu_m
             self.tenant_holding_mem[tenant] -= pod.mem_mi
             if self.on_usage_change is not None:
@@ -479,7 +544,6 @@ class Cluster:
         self.sched_cycles += 1
         pending = list(self._pending_pods.values())
         shuffler = self._shuffler
-        shuffler.shuffle(pending)                   # disorderly
         node_seq = self._node_seq
         n_nodes = len(node_seq)
         perm = self._node_perm
@@ -487,36 +551,40 @@ class Cluster:
         if shuffler.has_native_cycle:
             self._native_cycle(pending, perm, node_seq, n_nodes)
         else:
+            shuffler.shuffle(pending)               # disorderly
             self._python_cycle(pending, perm, node_seq, n_nodes)
         if self._pending_pods:
             self._kick_scheduler()
 
     def _native_cycle(self, pending, perm, node_seq, n_nodes):
-        """Scatter loop in the native helper: one call draws, scans and
-        picks nodes for every pending pod (identical algorithm to
-        ``_python_cycle``); only the binds come back to Python."""
+        """Fused scatter cycle in the native helper: one call shuffles
+        the pending order, draws, scans and picks nodes for every
+        pending pod (identical draw stream and algorithm to
+        ``shuffle(pending)`` + ``_python_cycle``); only the binds come
+        back to Python, applied in the shuffled pod order."""
         n_pods = len(pending)
         if n_pods > self._c_pod_cap:
-            import ctypes
             cap = max(64, 2 * n_pods)
             self._c_pod_cpu = (ctypes.c_int32 * cap)()
             self._c_pod_mem = (ctypes.c_int32 * cap)()
             self._c_bind = (ctypes.c_int32 * cap)()
+            self._c_pod_perm = (ctypes.c_int32 * cap)()
             self._c_pod_cap = cap
         pod_cpu, pod_mem = self._c_pod_cpu, self._c_pod_mem
         for j, pod in enumerate(pending):
             pod_cpu[j] = pod.cpu_m
             pod_mem[j] = pod.mem_mi
         # free/ready mirrors are already current (see __init__)
+        pod_perm = self._c_pod_perm
         self._shuffler.schedule_cycle(perm, n_nodes, self._c_free_cpu,
-                                      self._c_free_mem, bytes(self._c_ready),
-                                      n_pods, pod_cpu, pod_mem,
-                                      self._c_bind, self._c_state)
+                                      self._c_free_mem, self._c_ready,
+                                      n_pods, pod_perm, pod_cpu, pod_mem,
+                                      self._c_bind)
         bind = self._c_bind
-        for j, pod in enumerate(pending):
+        for j in range(n_pods):
             idx = bind[j]
             if idx >= 0:
-                self._bind(pod, node_seq[idx])
+                self._bind(pending[pod_perm[j]], node_seq[idx])
 
     def _python_cycle(self, pending, perm, node_seq, n_nodes):
         shuffler = self._shuffler
@@ -548,8 +616,10 @@ class Cluster:
     def _bind(self, pod: PodObj, node: NodeObj):
         pod.node = node.name
         pod.scheduled = self.sim.now()
+        pod._rv += 1
         node.cpu_used += pod.cpu_m
         node.mem_used += pod.mem_mi
+        node._rv += 1
         pod._holding = True
         if self._c_free_cpu is not None:
             i = self._node_idx[node.name]
@@ -557,7 +627,7 @@ class Cluster:
             self._c_free_mem[i] = node.mem_alloc - node.mem_used
         self.cpu_in_use += pod.cpu_m
         self.mem_in_use += pod.mem_mi
-        tenant = pod.labels.get("tenant", "default")
+        tenant = pod.tenant
         self.tenant_holding_cpu[tenant] = \
             self.tenant_holding_cpu.get(tenant, 0) + pod.cpu_m
         self.tenant_holding_mem[tenant] = \
@@ -593,6 +663,7 @@ class Cluster:
             return -1.0                              # node died mid-start
         pod.phase = RUNNING
         pod.started = self.sim.now()
+        pod._rv += 1
         self._notify("pod", MODIFIED, pod)
         dur = pod.duration_s
         if pod.payload is not None and self.payload_mode == "real":
@@ -639,6 +710,7 @@ class Cluster:
             return
         pod.phase = phase
         pod.finished = self.sim.now()
+        pod._rv += 1
         self._release(pod)                           # compute freed; object stays
         self._notify("pod", MODIFIED, pod)
 
@@ -659,6 +731,7 @@ class Cluster:
         if pod is None or pod.phase != RUNNING:
             return False
         pod.evicted = True
+        pod._rv += 1
         self.evictions += 1
         self._finish(pod, FAILED)
         return True
@@ -667,6 +740,7 @@ class Cluster:
     def fail_node(self, name: str):
         node = self.nodes[name]
         node.ready = False
+        node._rv += 1
         if self._c_free_cpu is not None:
             self._c_ready[self._node_idx[name]] = 0
         self._notify("node", MODIFIED, node)
@@ -675,11 +749,13 @@ class Cluster:
                 self._release(pod)
                 pod.phase = FAILED
                 pod.finished = self.sim.now()
+                pod._rv += 1
                 self._notify("pod", MODIFIED, pod)
 
     def restore_node(self, name: str):
         node = self.nodes[name]
         node.ready = True
+        node._rv += 1
         if node.cpu_used or node.mem_used:   # normally zero: failure released
             self.cpu_in_use -= node.cpu_used
             self.mem_in_use -= node.mem_used
@@ -712,8 +788,11 @@ class Cluster:
 
     def list_pvcs(self, namespace: Optional[str] = None) -> List[PVCObj]:
         self.api_calls += 1
-        return [p for (ns, _), p in self.pvcs.items()
-                if namespace is None or ns == namespace]
+        if namespace is None:
+            return list(self.pvcs.values())
+        pvcs = self.pvcs
+        return [pvcs[k] for k in self._pvcs_by_ns.get(namespace, ())
+                if k in pvcs]
 
     def allocatable(self) -> Tuple[int, int]:
         cpu = sum(n.cpu_alloc for n in self.nodes.values() if n.ready)

@@ -98,16 +98,31 @@ class Workflow:
         return len(self.levels())
 
     def namespace(self) -> str:
-        if self.tenant != "default":
-            return f"wf-{self.tenant}-{self.name}-{self.instance}"
-        return f"wf-{self.name}-{self.instance}"
+        ns = self.__dict__.get("_ns")
+        if ns is None:           # cached: called once per pod event at scale
+            if self.tenant != "default":
+                ns = f"wf-{self.tenant}-{self.name}-{self.instance}"
+            else:
+                ns = f"wf-{self.name}-{self.instance}"
+            self._ns = ns
+        return ns
+
+    def _derive(self, instance: int, tenant: str) -> "Workflow":
+        # instances share the validated task dict — re-running
+        # validate() (a topo sort) per instance made building a
+        # 100k-workflow stream O(instances x tasks) for nothing
+        new = object.__new__(Workflow)
+        new.name = self.name
+        new.tasks = self.tasks
+        new.instance = instance
+        new.tenant = tenant
+        return new
 
     def with_instance(self, i: int) -> "Workflow":
-        return Workflow(self.name, self.tasks, instance=i, tenant=self.tenant)
+        return self._derive(i, self.tenant)
 
     def with_tenant(self, tenant: str) -> "Workflow":
-        return Workflow(self.name, self.tasks, instance=self.instance,
-                        tenant=tenant)
+        return self._derive(self.instance, tenant)
 
     def total_requests(self):
         cpu = sum(t.resource_request()[0] for t in self.tasks.values())

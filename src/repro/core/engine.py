@@ -58,6 +58,9 @@ from repro.core.volumes import VolumeManager
 class WorkflowState:
     wf: Workflow
     scheduler: Optional[object] = None                  # level-1 order source
+    rec: Optional[object] = None       # cached metrics WorkflowRecord
+    create_cb: Optional[Callable] = None   # admission grant callback
+    labels_cache: Dict[str, Dict[str, str]] = field(default_factory=dict)
     pvc: Optional[str] = None
     created: Set[str] = field(default_factory=set)      # tasks with live pods
     completed: Set[str] = field(default_factory=set)    # deps satisfied
@@ -130,16 +133,19 @@ class KubeAdaptorEngine:
         self.events.register("pod-removed", self._on_pod_removed)
 
     def _mine(self, pod: PodObj) -> Optional[WorkflowState]:
-        if pod.labels.get("engine") != self.name:
+        # namespace probe first: it alone rejects foreign pods, and the
+        # label check only guards cross-engine namespace collisions
+        ws = self._ws.get(pod.namespace)
+        if ws is None or pod.labels.get("engine") != self.name:
             return None
-        return self._ws.get(pod.namespace)
+        return ws
 
     def _pod_updated(self, pod: PodObj):
         ws = self._mine(pod)
         if ws is None:
             return
         if pod.phase == RUNNING:
-            self.metrics.note_start(ws.wf, pod.task_id)
+            self.metrics.note_start_rec(ws.rec, pod.task_id)
             if self.speculative and not pod.labels.get("twin"):
                 self._arm_straggler_check(ws, pod)
         elif pod.phase == SUCCEEDED:
@@ -158,8 +164,9 @@ class KubeAdaptorEngine:
     def submit(self, wf: Workflow):
         self.start()
         ws = WorkflowState(wf=wf, scheduler=self.scheduler_cls(wf))
+        ws.create_cb = lambda task: self._admitted(ws, task)
         self._ws[ws.ns] = ws
-        self.metrics.note_submitted(wf)
+        ws.rec = self.metrics.note_submitted(wf)
         self.cluster.create_namespace(ws.ns, cb=lambda _ns: self._ns_ready(ws))
 
     def _ns_ready(self, ws: WorkflowState):
@@ -182,8 +189,7 @@ class KubeAdaptorEngine:
         if ws.done:
             return
         ready = [ws.wf.tasks[t] for t in self._ready_tasks(ws)]
-        self.arbiter.submit(ws.ns, ws.wf.tenant, ready,
-                            lambda task: self._admitted(ws, task))
+        self.arbiter.submit(ws.ns, ws.wf.tenant, ready, ws.create_cb)
 
     def _admitted(self, ws: WorkflowState, task: Task) -> bool:
         # a grant may arrive after the workflow moved on (late wake-up);
@@ -195,12 +201,22 @@ class KubeAdaptorEngine:
 
     def _create_pod(self, ws: WorkflowState, task: Task, twin: bool = False):
         name = task.id + ("-twin" if twin else "")
-        labels = {"engine": self.name, "task": task.id,
-                  "tenant": ws.wf.tenant}
-        if task.virtual:
-            labels["virtual"] = "1"
         if twin:
-            labels["twin"] = "1"
+            labels = {"engine": self.name, "task": task.id,
+                      "tenant": ws.wf.tenant, "twin": "1"}
+            if task.virtual:
+                labels["virtual"] = "1"
+        else:
+            # one immutable labels dict per (workflow, task), shared by
+            # every incarnation (retries) — pod labels are never
+            # mutated after creation
+            labels = ws.labels_cache.get(task.id)
+            if labels is None:
+                labels = {"engine": self.name, "task": task.id,
+                          "tenant": ws.wf.tenant}
+                if task.virtual:
+                    labels["virtual"] = "1"
+                ws.labels_cache[task.id] = labels
         cpu, mem = task.resource_request()
         payload = None
         if task.payload is not None:
@@ -209,13 +225,13 @@ class KubeAdaptorEngine:
         pod = PodObj(name=name, namespace=ws.ns, task_id=task.id,
                      workflow=ws.wf.name, cpu_m=cpu, mem_mi=mem,
                      duration_s=task.run_time(), payload=payload,
-                     volume=ws.pvc, labels=labels)
+                     volume=ws.pvc, labels=labels, tenant=ws.wf.tenant)
         ws.created.add(task.id)
         ws.ready_pool.discard(task.id)
         # charge headroom until the informer observes the pod — retried
         # pods and twins bypass admission but must not double-spend
         self.arbiter.reserve(ws.ns, name, ws.wf.tenant, cpu, mem)
-        self.metrics.note_first_create(ws.wf)
+        self.metrics.note_first_create_rec(ws.rec)
         self.cluster.create_pod(
             pod,
             error_cb=lambda reason, existing: self._on_create_error(
@@ -243,7 +259,7 @@ class KubeAdaptorEngine:
             return
         task_id = pod.task_id
         if task_id not in ws.completed:
-            self.metrics.note_finish(ws.wf, task_id)
+            self.metrics.note_finish_rec(ws.rec, task_id)
         # destruction module removes the finished pod (twin too)
         self.cluster.delete_pod(pod.namespace, pod.name)
         if task_id in ws.speculated:
@@ -280,7 +296,7 @@ class KubeAdaptorEngine:
             # task re-enters the ready pool and re-queues through
             # admission (it must not steal back the freed headroom),
             # with no retry-budget charge
-            self.metrics.wf_record(ws.wf).preempted += 1
+            ws.rec.preempted += 1
 
             def requeue(_p):
                 if pod.name.endswith("-twin"):
@@ -295,7 +311,7 @@ class KubeAdaptorEngine:
             return
         n = ws.retries.get(tid, 0) + 1
         ws.retries[tid] = n
-        self.metrics.wf_record(ws.wf).retries += 1
+        ws.rec.retries += 1
         task = ws.wf.tasks[tid]
         if n > self.p.max_retries:
             if self.p.on_retry_exhausted == "fail-workflow":

@@ -184,13 +184,28 @@ class MetricsCollector:
                                                  tenant=wf.tenant)
         return self.workflows[key]
 
-    def note_submitted(self, wf: Workflow):
-        self.wf_record(wf).submitted_at = self.sim.now()
+    def note_submitted(self, wf: Workflow) -> WorkflowRecord:
+        rec = self.wf_record(wf)
+        rec.submitted_at = self.sim.now()
+        return rec               # engines cache it for the _rec fast paths
 
     def note_first_create(self, wf: Workflow):
         rec = self.wf_record(wf)
         if rec.first_create < 0:
             rec.first_create = self.sim.now()
+
+    # -- record-based fast paths: one wf_record lookup per WORKFLOW
+    # (engines keep the record on their per-workflow state) instead of
+    # one tuple-key dict probe per pod event
+    def note_first_create_rec(self, rec: WorkflowRecord):
+        if rec.first_create < 0:
+            rec.first_create = self.sim.now()
+
+    def note_start_rec(self, rec: WorkflowRecord, task_id: str):
+        rec.starts.append((self.sim.now(), task_id))
+
+    def note_finish_rec(self, rec: WorkflowRecord, task_id: str):
+        rec.finishes[task_id] = self.sim.now()
 
     def note_admission_deferred(self, tenant: str):
         self.admission_deferrals[tenant] = \

@@ -166,6 +166,40 @@ class _TenantMergeOrder(QueueOrder):
     pops requests in exactly that order (seq ties across equal-ratio
     tenants included) without materializing it.  Subclasses define the
     per-round usage snapshot and the tenant ranking over it.
+
+    Batched multi-grant (ISSUE 5): one walk call grants EVERY fitting
+    request.  The pre-batched walk re-entered per grant — a fresh
+    usage snapshot (O(tenants) dict copies + a ledger sync) and a full
+    heap rebuild each time, the per-grant constant that capped the
+    >100k-workflow tier.  The single-pass walk instead updates
+    incrementally after each grant, which is EXACTLY the generic
+    loop's re-sort semantics because within one evaluate:
+
+    * headroom only shrinks, so a request that already failed its
+      fit-check can never fit later in the pass — re-checking it (what
+      a round restart does) cannot grant it;
+    * a grant changes only the GRANTING tenant's usage (the informer
+      cache cannot move mid-evaluate; the only ledger change is the
+      grant's own reservation), and ``_rank`` depends only on the
+      tenant's own usage entry — so re-ranking the whole heap equals
+      re-ranking that one tenant;
+    * ``_walk_sync`` after each grant runs the same O(changes) ledger
+      sync the per-round ``_round_usage`` ran (its only live candidate
+      is the reservation just charged), so quota/rank state matches
+      the round-restart value even when the reservation is immediately
+      dropped against a stale non-terminal cache entry;
+    * the granting tenant re-enters at its HEAD (not past the granted
+      position): its earlier requests must be re-probed under the
+      tenant's increased usage — a quota cap that now binds at the
+      head sits the tenant out for the rest of the pass, exactly as a
+      round restart would.
+
+    Equivalence is pinned by the fast==generic tests for fair-share,
+    drf, and the capped merge walks (tests/test_scale_core.py,
+    tests/test_policy_pipeline.py, tests/test_informer_views.py).
+    Contract for subclasses: ``_rank(tenant, usage)`` and
+    ``_walk_rank(tenant)`` must read only ``tenant``'s own usage —
+    that locality is what makes frozen-at-push heap ranks exact.
     """
 
     dynamic_order = True
@@ -184,11 +218,26 @@ class _TenantMergeOrder(QueueOrder):
     # on_remove is a no-op
 
     def _round_usage(self):
-        """One usage snapshot per grant round; must trigger the same
-        reservation sync the generic loop's order() call does."""
+        """Usage snapshot for the generic order() reference path; must
+        trigger the same reservation sync the walk's ``_walk_sync``
+        does."""
         raise NotImplementedError
 
     def _rank(self, tenant: str, usage) -> float:
+        raise NotImplementedError
+
+    # -- walk-path ranking: live references instead of per-walk copies.
+    # A rank read at heap-push time equals the copied-snapshot rank at
+    # the same instant, and between pushes only the GRANTING tenant's
+    # entries move (reserve() updates the ledger maps in place), so
+    # frozen-at-push heap entries stay exactly the generic pass's
+    # ranks.  Ledger re-sync after a grant is O(changes): its only
+    # live candidate is the reservation the grant just charged.
+    def _walk_sync(self):
+        arb = self.arb
+        arb.ledger.sync(arb.inf.pods)
+
+    def _walk_rank(self, tenant: str) -> float:
         raise NotImplementedError
 
     def order(self, pending: List[AdmissionRequest],
@@ -224,52 +273,57 @@ class _TenantMergeOrder(QueueOrder):
         arb = self.arb
         pending = arb.pending
         by_tenant = self._by_tenant
-        while True:
-            if not pending:
-                return
-            # one sync per round, mirroring the generic loop's order()
-            # call at the top of every pass (final no-grant pass too)
-            usage = self._round_usage()
-            if arb._no_fit_possible(ac, am):
-                return
-            heap = []
-            for tenant, q in by_tenant.items():
+        if not pending:
+            return
+        # one sync per WALK (the per-round re-sync it replaces is a
+        # no-op mid-evaluate except for grant reservations, which are
+        # re-synced at O(changes) after each grant)
+        self._walk_sync()
+        if arb._no_fit_possible(ac, am):
+            return
+        rank = self._walk_rank
+        heap = []
+        for tenant, q in by_tenant.items():
+            while q and pending.get(q[0].key()) is not q[0]:
+                q.popleft()        # granted/forgotten leftovers
+            if q:
+                heap.append((rank(tenant), q[0].seq, tenant, 0))
+        heapq.heapify(heap)
+        backfill = self.intra_tenant_backfill
+        while heap:
+            ratio, _seq, tenant, idx = heapq.heappop(heap)
+            q = by_tenant[tenant]
+            req = q[idx]           # push-time staleness check keeps
+            #                        entries live
+            if not arb._permits(req):
+                # quota head-of-line (checked before the headroom
+                # fit): the tenant sits out this pass — its queue
+                # is NOT re-scanned behind the capped head (at a
+                # 1000-workflow backlog that rescan made every
+                # evaluate O(pending))
+                continue
+            if req.cpu <= ac and req.mem <= am:
+                if arb._grant(req):
+                    ac -= req.cpu
+                    am -= req.mem
+                # batched multi-grant: keep walking instead of
+                # re-entering.  Only this tenant's rank can have
+                # changed; it restarts at its head (see class doc).
+                self._walk_sync()
+                if arb._no_fit_possible(ac, am):
+                    return
                 while q and pending.get(q[0].key()) is not q[0]:
-                    q.popleft()    # granted/forgotten leftovers
+                    q.popleft()
                 if q:
-                    heap.append((self._rank(tenant, usage),
-                                 q[0].seq, tenant, 0))
-            if not heap:
-                return
-            heapq.heapify(heap)
-            granted = False
-            while heap:
-                ratio, _seq, tenant, idx = heapq.heappop(heap)
-                q = by_tenant[tenant]
-                req = q[idx]       # push-time staleness check keeps
-                #                    entries live
-                if not arb._permits(req):
-                    # quota head-of-line (checked before the headroom
-                    # fit): the tenant sits out this round — its queue
-                    # is NOT re-scanned behind the capped head (at a
-                    # 1000-workflow backlog that rescan made every
-                    # evaluate O(pending))
-                    continue
-                if req.cpu <= ac and req.mem <= am:
-                    if arb._grant(req):
-                        ac -= req.cpu
-                        am -= req.mem
-                    granted = True
-                    break          # re-rank with the new usage
-                if not self.intra_tenant_backfill:
-                    continue       # strict FIFO within the tenant
-                nxt = idx + 1
-                while nxt < len(q) and pending.get(q[nxt].key()) is not q[nxt]:
-                    nxt += 1
-                if nxt < len(q):
-                    heapq.heappush(heap, (ratio, q[nxt].seq, tenant, nxt))
-            if not granted:
-                return
+                    heapq.heappush(heap, (rank(tenant), q[0].seq, tenant, 0))
+                continue
+            if not backfill:
+                continue           # strict FIFO within the tenant
+            nxt = idx + 1
+            while nxt < len(q) and pending.get(q[nxt].key()) is not q[nxt]:
+                nxt += 1
+            if nxt < len(q):
+                heapq.heappush(heap, (ratio, q[nxt].seq, tenant, nxt))
 
 
 class FifoMergeOrder(_TenantMergeOrder):
@@ -288,13 +342,16 @@ class FifoMergeOrder(_TenantMergeOrder):
     def _round_usage(self):
         # ranking ignores usage, but the quota filter reads the
         # reservation ledger + informer aggregates: sync once per
-        # round, the same cadence every dynamic-order policy keeps
+        # walk, the same cadence every dynamic-order policy keeps
         arb = self.arb
         arb.ledger.sync(arb.inf.pods)
         return None
 
     def _rank(self, tenant: str, usage) -> float:
         return 0.0                 # heap ties on head seq = arrival order
+
+    def _walk_rank(self, tenant: str) -> float:
+        return 0.0
 
     def order(self, pending: List[AdmissionRequest],
               arbiter) -> List[AdmissionRequest]:
@@ -327,6 +384,12 @@ class FairShareOrder(_TenantMergeOrder):
         share = self.arb.tenant(tenant)
         return usage.get(tenant, 0) / max(share.weight, 1e-9)
 
+    def _walk_rank(self, tenant: str) -> float:
+        arb = self.arb
+        held = (arb.inf.pods.nonterminal_cpu_by_tenant.get(tenant, 0)
+                + arb.ledger.cpu_by_tenant.get(tenant, 0))
+        return held / max(arb.tenant(tenant).weight, 1e-9)
+
 
 class DominantShareOrder(_TenantMergeOrder):
     """Dominant-resource fairness (DRF): rank tenants by their dominant
@@ -347,6 +410,18 @@ class DominantShareOrder(_TenantMergeOrder):
         dominant = max(cpu_map.get(tenant, 0) / cpu_a,
                        mem_map.get(tenant, 0) / mem_a)
         return dominant / max(share.weight, 1e-9)
+
+    def _walk_rank(self, tenant: str) -> float:
+        arb = self.arb
+        pods = arb.inf.pods
+        ledger = arb.ledger
+        cpu_a, mem_a = arb.allocatable()
+        cpu = (pods.nonterminal_cpu_by_tenant.get(tenant, 0)
+               + ledger.cpu_by_tenant.get(tenant, 0))
+        mem = (pods.nonterminal_mem_by_tenant.get(tenant, 0)
+               + ledger.mem_by_tenant.get(tenant, 0))
+        dominant = max(cpu / max(cpu_a, 1), mem / max(mem_a, 1))
+        return dominant / max(arb.tenant(tenant).weight, 1e-9)
 
 
 QUEUE_ORDERS = {

@@ -32,7 +32,7 @@ from typing import Callable, List, Optional, Tuple
 from repro.core.dag import Task
 
 
-@dataclass
+@dataclass(slots=True)
 class AdmissionRequest:
     namespace: str
     tenant: str

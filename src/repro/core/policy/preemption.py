@@ -80,7 +80,7 @@ class Preemptor:
             if arb.evict(pod.namespace, pod.name):
                 evicted.append(pod)
                 arb.preemptions += 1
-                arb.tenant(pod.labels.get("tenant", "default")).preempted += 1
+                arb.tenant(pod.tenant).preempted += 1
         arb.preemption_log.append({
             "t": now,
             "tenant": cand.tenant,
@@ -90,7 +90,7 @@ class Preemptor:
             "deficit_cpu_m": max(need_cpu, 0),
             "deficit_mem_mi": max(need_mem, 0),
             "victims": [(p.namespace, p.name,
-                         p.labels.get("tenant", "default")) for p in evicted],
+                         p.tenant) for p in evicted],
         })
 
     def _plan(self, prio: int, need_cpu: int, need_mem: int):
@@ -101,7 +101,7 @@ class Preemptor:
         for pod in arb.inf.pods.lister():
             if pod.phase != RUNNING or pod.labels.get("virtual") == "1":
                 continue
-            vt = pod.labels.get("tenant", "default")
+            vt = pod.tenant
             vprio = arb.tenant(vt).priority
             if vprio >= prio:
                 continue

@@ -149,6 +149,7 @@ class AdmissionArbiter(ResourceGatherer):
         self.pending: Dict[Tuple[str, str], AdmissionRequest] = {}
         self.tenants: Dict[str, TenantShare] = {}
         self.admitted = 0
+        self.grant_batches = 0             # evaluates granting >= 1 request
         self.deferrals = 0
         self.quota_rejects = 0
         self.preemptions = 0               # RUNNING pods evicted
@@ -247,6 +248,12 @@ class AdmissionArbiter(ResourceGatherer):
                create: Callable[[Task], None]):
         """Queue admission requests (idempotent per (namespace, task))
         and immediately evaluate the pending set."""
+        if not tasks:
+            # nothing new to queue: every submit with no ready tasks
+            # rides the pod-removal chain, whose informer delete
+            # callback already evaluated at this instant with this
+            # exact state — a re-evaluate is a provable no-op
+            return
         for task in tasks:
             cpu, mem = task.resource_request()
             req = AdmissionRequest(namespace, tenant, task, create,
@@ -318,6 +325,7 @@ class AdmissionArbiter(ResourceGatherer):
         """Drive the pipeline once: grant as many pending requests as
         headroom, the ordering plugin's walk, and the filters allow,
         then mark deferrals and give the Preempt stage its shot."""
+        before = self.admitted
         if not self._fast:
             self._evaluate_generic()
         else:
@@ -328,6 +336,8 @@ class AdmissionArbiter(ResourceGatherer):
             ac, am = self.available()
             if self.pending:
                 self.order_plugin.walk(ac, am)
+        if self.admitted != before:
+            self.grant_batches += 1        # one multi-grant admission round
         self._mark_deferred()
         if self.preemptor is not None:
             self.preemptor.maybe_preempt()

@@ -10,26 +10,39 @@ CPython's ``shuffle`` burns one Python-level ``_randbelow`` call per
 element: ``k = n.bit_length(); r = getrandbits(k); while r >= n:
 r = getrandbits(k)``, and each ``getrandbits(k<=32)`` consumes exactly
 one Mersenne-Twister word (``genrand_uint32() >> (32 - k)``).
-``ExactShuffler`` consumes the identical word stream, but fetches it in
-bulk: one ``getrandbits(32 * N)`` C call yields N words in genrand
-order (the bignum's little-end word is the first draw), so the
-Fisher-Yates rejection sampling can be replayed against a flat buffer.
+``ExactShuffler`` consumes the identical word stream, replayed against
+a flat buffer of words in genrand order.
 
-Two backends replay the stream:
+Two backends produce that stream:
 
-* native — a ~30-line C helper (compiled once with the system cc into
-  ``_native/``, loaded via ctypes) drains draws and applies the swaps
-  to an int32 permutation array in one call;
-* python — a tight loop over the unpacked words (used when no compiler
-  is available, or under ``REPRO_SHUFFLE_NO_NATIVE=1``).
+* native — a small C helper (compiled once with the system cc into
+  ``_native/``, loaded via ctypes) carrying its OWN MT19937 core,
+  seeded from ``rng.getstate()`` at construction: the exact genrand
+  word sequence the wrapped ``random.Random`` would have produced, but
+  generated straight into a reusable uint32 buffer (no bignum
+  assembly, no ``to_bytes`` copy).  On top of the word stream the
+  helper fuses the whole disordered-scheduler cycle
+  (``ka_schedule_cycle``): the pending-pod shuffle, the per-pod node
+  reshuffle, the first-fit capacity scan and the in-place charging all
+  run in one call — only the resulting binds come back to Python.
+* python — ``rng.getrandbits(32 * N)`` bulk fetches unpacked into
+  tuples (used when no compiler is available, or under
+  ``REPRO_SHUFFLE_NO_NATIVE=1``); the pure-Python cycle in cluster.py
+  is the semantic reference for the fused native cycle.
 
 Both produce identical permutations and identical word consumption —
-pinned against ``random.shuffle`` by tests/test_scale_core.py.
+pinned against ``random.shuffle`` by tests/test_scale_core.py, and the
+fused cycle is pinned transitively by every binding-sequence hash
+(tests/test_scale_core.py, tests/test_policy_pipeline.py,
+tests/test_informer_views.py), which run on the native path wherever a
+compiler exists and on the fallback in CI's no-native job.
 
 The wrapped ``random.Random`` must have no other consumers while a
-shuffler is attached (words are buffered ahead); the cluster's
-scheduling RNG satisfies this — it is consumed exclusively by the
-scheduler's shuffles.
+shuffler is attached (the python backend buffers words ahead; the
+native backend forks the generator state at construction and never
+consumes the Python object again).  The cluster's scheduling RNG
+satisfies this — it is consumed exclusively by the scheduler's
+shuffles.
 """
 from __future__ import annotations
 
@@ -56,97 +69,179 @@ def _ensure_shift(n: int) -> None:
 
 
 # ---------------------------------------------------------------------------
-# native backend: Fisher-Yates draw+apply over the word buffer
+# native backend: MT19937 word stream + fused Fisher-Yates/scatter cycle
 # ---------------------------------------------------------------------------
 _C_SRC = r"""
 #include <stdint.h>
 
-/* Replay random.shuffle's draw stream for a list of `length`, applying
- * the swaps to `perm`. Resumes at element `start` (0-based, element j
- * swaps index length-1-j); returns the next unfinished element (==
- * length-1 when done) and writes the word cursor back to *pos_out.
- * Stops early when the word buffer runs dry so the caller can refill. */
-long ka_draw_apply(const uint32_t *words, long n_words, long pos,
-                   long length, long start, int32_t *perm, long *pos_out)
+/* MT19937 core, bit-identical to CPython's _randommodule.c genrand
+ * stream.  `state` is the 625-word layout of random.Random.getstate():
+ * state[0..623] = mt[], state[624] = mti (624 means "twist before the
+ * next draw"). */
+#define MT_N 624
+#define MT_M 397
+#define MATRIX_A   0x9908b0dfU
+#define UPPER_MASK 0x80000000U
+#define LOWER_MASK 0x7fffffffU
+
+static uint32_t mt_next(uint32_t *state)
 {
+    uint32_t *mt = state;
+    uint32_t mti = state[MT_N];
+    uint32_t y;
+    if (mti >= MT_N) {
+        int kk;
+        for (kk = 0; kk < MT_N - MT_M; kk++) {
+            y = (mt[kk] & UPPER_MASK) | (mt[kk + 1] & LOWER_MASK);
+            mt[kk] = mt[kk + MT_M] ^ (y >> 1) ^ ((y & 1U) ? MATRIX_A : 0U);
+        }
+        for (; kk < MT_N - 1; kk++) {
+            y = (mt[kk] & UPPER_MASK) | (mt[kk + 1] & LOWER_MASK);
+            mt[kk] = mt[kk + (MT_M - MT_N)] ^ (y >> 1)
+                     ^ ((y & 1U) ? MATRIX_A : 0U);
+        }
+        y = (mt[MT_N - 1] & UPPER_MASK) | (mt[0] & LOWER_MASK);
+        mt[MT_N - 1] = mt[MT_M - 1] ^ (y >> 1) ^ ((y & 1U) ? MATRIX_A : 0U);
+        mti = 0;
+    }
+    y = mt[mti++];
+    state[MT_N] = mti;
+    y ^= (y >> 11);
+    y ^= (y << 7) & 0x9d2c5680U;
+    y ^= (y << 15) & 0xefc60000U;
+    y ^= (y >> 18);
+    return y;
+}
+
+/* Refill the shared word buffer from the generator state.  The Python
+ * side and the fused cycle below both consume through this buffer, so
+ * the global word order is a single stream regardless of which entry
+ * point drains it. */
+void ka_mt_fill(uint32_t *state, uint32_t *words, long n)
+{
+    for (long i = 0; i < n; i++)
+        words[i] = mt_next(state);
+}
+
+static inline uint32_t next_word(uint32_t *state, uint32_t *words,
+                                 long n_words, long *pos)
+{
+    if (*pos >= n_words) {
+        ka_mt_fill(state, words, n_words);
+        *pos = 0;
+    }
+    return words[(*pos)++];
+}
+
+/* Replay random.shuffle's draw stream for a list of `length`, applying
+ * the swaps to `perm`.  Draws flow through the shared buffer; the word
+ * cursor is read from and written back to *pos_io. */
+void ka_draw_apply(uint32_t *state, uint32_t *words, long n_words,
+                   long *pos_io, long length, int32_t *perm)
+{
+    long pos = *pos_io;
     long top = length - 1;
-    long j = start;
-    for (; j < top; j++) {
+    for (long j = 0; j < top; j++) {
         uint32_t n = (uint32_t)(length - j);
         int shift = __builtin_clz(n);           /* 32 - bit_length(n) */
         uint32_t r;
-        for (;;) {
-            if (pos >= n_words) { *pos_out = pos; return j; }
-            r = words[pos++] >> shift;
-            if (r < n) break;
-        }
+        do {
+            r = next_word(state, words, n_words, &pos) >> shift;
+        } while (r >= n);
         int32_t i = (int32_t)(length - 1 - j);
         int32_t tmp = perm[i];
         perm[i] = perm[r];
         perm[r] = tmp;
     }
-    *pos_out = pos;
-    return j;
+    *pos_io = pos;
 }
 
-/* One disordered-scheduler cycle body: for each pending pod, reshuffle
- * the node permutation (identical draw stream to random.shuffle) and
- * first-fit scan it against the free-capacity arrays, recording the
- * chosen node index (or -1) in bind_out and charging the copy of the
- * free arrays so later pods in the cycle see earlier binds.
- * state[0] = next pod, state[1] = next shuffle element of that pod
- * (resume point when the word buffer runs dry). Returns 1 when the
- * cycle completed, 0 when the caller must refill and call again. */
-long ka_schedule_cycle(const uint32_t *words, long n_words, long pos,
-                       long n_nodes, int32_t *perm,
+/* One fused disordered-scheduler cycle, identical to the pure-Python
+ * reference in cluster.py:
+ *   1. shuffle `pod_perm` (identity-initialized here) with exactly the
+ *      draws random.shuffle(pending) would consume;
+ *   2. for each pod in that shuffled order: reshuffle the node `perm`
+ *      (same continuous stream), then first-fit scan it against the
+ *      free-capacity arrays, charging the chosen node in place so
+ *      later pods of the cycle see earlier binds;
+ *   3. record the chosen node index (or -1) in bind_out[j] for the
+ *      j-th pod of the SHUFFLED order (its original index is
+ *      pod_perm[j]).
+ * The cycle-start free maxima skip the scan (never the draws) for
+ * pods that provably fit no node — the same upper-bound argument the
+ * Python reference uses. */
+void ka_schedule_cycle(uint32_t *state, uint32_t *words, long n_words,
+                       long *pos_io, long n_nodes, int32_t *perm,
                        int32_t *free_cpu, int32_t *free_mem,
                        const uint8_t *ready,
-                       long n_pods, const int32_t *pod_cpu,
-                       const int32_t *pod_mem,
-                       int32_t *bind_out, long *state, long *pos_out)
+                       long n_pods, int32_t *pod_perm,
+                       const int32_t *pod_cpu, const int32_t *pod_mem,
+                       int32_t *bind_out)
 {
-    long j = state[0];
-    long elem = state[1];
-    long top = n_nodes - 1;
-    for (; j < n_pods; j++, elem = 0) {
-        for (; elem < top; elem++) {
+    long pos = *pos_io;
+    for (long j = 0; j < n_pods; j++)
+        pod_perm[j] = (int32_t)j;
+    long ptop = n_pods - 1;
+    for (long j = 0; j < ptop; j++) {
+        uint32_t n = (uint32_t)(n_pods - j);
+        int shift = __builtin_clz(n);
+        uint32_t r;
+        do {
+            r = next_word(state, words, n_words, &pos) >> shift;
+        } while (r >= n);
+        int32_t i = (int32_t)(n_pods - 1 - j);
+        int32_t tmp = pod_perm[i];
+        pod_perm[i] = pod_perm[r];
+        pod_perm[r] = tmp;
+    }
+    int32_t max_cpu = 0, max_mem = 0;     /* cycle-start upper bounds */
+    for (long s = 0; s < n_nodes; s++) {
+        if (!ready[s]) continue;
+        if (free_cpu[s] > max_cpu) max_cpu = free_cpu[s];
+        if (free_mem[s] > max_mem) max_mem = free_mem[s];
+    }
+    long ntop = n_nodes - 1;
+    for (long j = 0; j < n_pods; j++) {
+        for (long elem = 0; elem < ntop; elem++) {
             uint32_t n = (uint32_t)(n_nodes - elem);
             int shift = __builtin_clz(n);
             uint32_t r;
-            for (;;) {
-                if (pos >= n_words) {
-                    state[0] = j; state[1] = elem; *pos_out = pos;
-                    return 0;
-                }
-                r = words[pos++] >> shift;
-                if (r < n) break;
-            }
+            do {
+                r = next_word(state, words, n_words, &pos) >> shift;
+            } while (r >= n);
             int32_t i = (int32_t)(n_nodes - 1 - elem);
             int32_t tmp = perm[i];
             perm[i] = perm[r];
             perm[r] = tmp;
         }
-        int32_t cpu = pod_cpu[j], mem = pod_mem[j];
+        long p = pod_perm[j];
+        int32_t cpu = pod_cpu[p], mem = pod_mem[p];
         int32_t chosen = -1;
-        for (long s = 0; s < n_nodes; s++) {
-            int32_t idx = perm[s];
-            if (ready[idx] && free_cpu[idx] >= cpu && free_mem[idx] >= mem) {
-                free_cpu[idx] -= cpu;
-                free_mem[idx] -= mem;
-                chosen = idx;
-                break;
+        if (cpu <= max_cpu && mem <= max_mem) {
+            for (long s = 0; s < n_nodes; s++) {
+                int32_t idx = perm[s];
+                if (ready[idx] && free_cpu[idx] >= cpu
+                        && free_mem[idx] >= mem) {
+                    free_cpu[idx] -= cpu;
+                    free_mem[idx] -= mem;
+                    chosen = idx;
+                    break;
+                }
             }
         }
         bind_out[j] = chosen;
     }
-    state[0] = j; state[1] = 0; *pos_out = pos;
-    return 1;
+    *pos_io = pos;
 }
 """
 
 _NATIVE_DIR = Path(__file__).resolve().parent / "_native"
 _native_lib = None
 _native_tried = False
+
+_U32P = ctypes.POINTER(ctypes.c_uint32)
+_I32P = ctypes.POINTER(ctypes.c_int32)
+_LONGP = ctypes.POINTER(ctypes.c_long)
 
 
 def _load_native():
@@ -175,25 +270,20 @@ def _load_native():
             finally:
                 os.unlink(c_path)
         lib = ctypes.CDLL(str(so_path))
+        fill = lib.ka_mt_fill
+        fill.restype = None
+        fill.argtypes = [_U32P, _U32P, ctypes.c_long]
         draw = lib.ka_draw_apply
-        draw.restype = ctypes.c_long
-        draw.argtypes = [ctypes.c_char_p, ctypes.c_long, ctypes.c_long,
-                         ctypes.c_long, ctypes.c_long,
-                         ctypes.POINTER(ctypes.c_int32),
-                         ctypes.POINTER(ctypes.c_long)]
+        draw.restype = None
+        draw.argtypes = [_U32P, _U32P, ctypes.c_long, _LONGP,
+                         ctypes.c_long, _I32P]
         cycle = lib.ka_schedule_cycle
-        cycle.restype = ctypes.c_long
-        cycle.argtypes = [ctypes.c_char_p, ctypes.c_long, ctypes.c_long,
-                          ctypes.c_long, ctypes.POINTER(ctypes.c_int32),
-                          ctypes.POINTER(ctypes.c_int32),
-                          ctypes.POINTER(ctypes.c_int32),
-                          ctypes.c_char_p, ctypes.c_long,
-                          ctypes.POINTER(ctypes.c_int32),
-                          ctypes.POINTER(ctypes.c_int32),
-                          ctypes.POINTER(ctypes.c_int32),
-                          ctypes.POINTER(ctypes.c_long),
-                          ctypes.POINTER(ctypes.c_long)]
-        _native_lib = (draw, cycle)
+        cycle.restype = None
+        cycle.argtypes = [_U32P, _U32P, ctypes.c_long, _LONGP,
+                          ctypes.c_long, _I32P, _I32P, _I32P,
+                          ctypes.POINTER(ctypes.c_uint8),
+                          ctypes.c_long, _I32P, _I32P, _I32P, _I32P]
+        _native_lib = (fill, draw, cycle)
     except Exception:
         _native_lib = None
     return _native_lib
@@ -202,8 +292,9 @@ def _load_native():
 class ExactShuffler:
     """Drop-in ``shuffle`` with bit-identical draws from a bulk buffer."""
 
-    __slots__ = ("rng", "_raw", "_words", "_pos", "_native", "_native_cycle",
-                 "_posbox", "_posref", "_identity", "_perm_pool")
+    __slots__ = ("rng", "_raw", "_words", "_pos", "_fill", "_draw",
+                 "_native_cycle", "_state", "_buf", "_posbox", "_posref",
+                 "_identity", "_perm_pool")
 
     def __init__(self, rng: random.Random, native: Optional[bool] = None):
         self.rng = rng
@@ -213,20 +304,31 @@ class ExactShuffler:
         fns = _load_native() if native is not False else None
         if native is True and fns is None:
             raise RuntimeError("native shuffle backend unavailable")
-        self._native, self._native_cycle = fns if fns else (None, None)
-        self._posbox = ctypes.c_long(0)
+        self._fill, self._draw, self._native_cycle = fns if fns else \
+            (None, None, None)
+        if self._fill is not None:
+            # fork the generator: the C core continues the exact word
+            # stream from the wrapped rng's current state, and the
+            # Python object is never consumed again (see module doc)
+            key = rng.getstate()[1]        # 624 mt words + index
+            self._state = (ctypes.c_uint32 * 625)(*key)
+            self._buf = (ctypes.c_uint32 * _WORDS_PER_FETCH)()
+        else:
+            self._state = self._buf = None
+        self._posbox = ctypes.c_long(_WORDS_PER_FETCH)
         self._posref = ctypes.byref(self._posbox)
         self._identity: dict = {}          # length -> identity perm bytes
         self._perm_pool: dict = {}         # length -> reusable perm buffer
 
     @property
     def backend(self) -> str:
-        return "native" if self._native is not None else "python"
+        return "native" if self._fill is not None else "python"
 
+    # ---- python word buffer ------------------------------------------------
     def _refill(self):
         raw = self.rng.getrandbits(32 * _WORDS_PER_FETCH)
         self._raw = raw.to_bytes(4 * _WORDS_PER_FETCH, "little")
-        self._words = None                 # unpacked lazily (python path)
+        self._words = None                 # unpacked lazily
         self._pos = 0
 
     def _word_tuple(self) -> Sequence[int]:
@@ -238,13 +340,13 @@ class ExactShuffler:
     def make_perm(self, n: int):
         """An identity permutation draw_apply can mutate: int32 ctypes
         array (native) or plain list (python)."""
-        if self._native is not None:
+        if self._fill is not None:
             arr = (ctypes.c_int32 * n)(*range(n))
             return arr
         return list(range(n))
 
     def reset_perm(self, perm, n: int):
-        if self._native is not None:
+        if self._fill is not None:
             ident = self._identity.get(n)
             if ident is None:
                 ident = self._identity[n] = struct.pack(f"<{n}i", *range(n))
@@ -257,41 +359,27 @@ class ExactShuffler:
         ``n`` and apply the identical Fisher-Yates swaps to ``perm``."""
         if n < 2:
             return
-        if self._native is not None:
-            done = 0
-            top = n - 1
-            while True:
-                if self._pos >= _WORDS_PER_FETCH:
-                    self._refill()
-                done = self._native(self._raw, _WORDS_PER_FETCH, self._pos,
-                                    n, done, perm, self._posref)
-                self._pos = self._posbox.value
-                if done >= top:
-                    return
-                self._refill()
+        if self._fill is not None:
+            self._draw(self._state, self._buf, _WORDS_PER_FETCH,
+                       self._posref, n, perm)
         else:
             apply_swaps(perm, self.draw_swaps(n))
 
     def schedule_cycle(self, perm, n_nodes: int, free_cpu, free_mem, ready,
-                       n_pods: int, pod_cpu, pod_mem, bind_out,
-                       state) -> None:
-        """Native scatter cycle: per pod, reshuffle ``perm`` (identical
-        draw stream) and first-fit scan against the free arrays,
-        charging them in place; ``bind_out[j]`` gets the node index or
-        -1. Callers must check :attr:`has_native_cycle`."""
-        state[0] = 0
-        state[1] = 0
-        while True:
-            if self._pos >= _WORDS_PER_FETCH:
-                self._refill()
-            done = self._native_cycle(
-                self._raw, _WORDS_PER_FETCH, self._pos, n_nodes, perm,
-                free_cpu, free_mem, ready, n_pods, pod_cpu, pod_mem,
-                bind_out, state, self._posref)
-            self._pos = self._posbox.value
-            if done:
-                return
-            self._refill()
+                       n_pods: int, pod_perm, pod_cpu, pod_mem,
+                       bind_out) -> None:
+        """Fused native scatter cycle: shuffle the pending order into
+        ``pod_perm`` (identity-initialized C-side), then per pod
+        reshuffle ``perm`` and first-fit scan the free arrays, charging
+        them in place; ``bind_out[j]`` gets the node index (or -1) for
+        the pod originally at index ``pod_perm[j]``.  Identical draw
+        stream and binds to ``shuffle(pending)`` + per-pod
+        ``draw_apply`` + the Python scan.  Callers must check
+        :attr:`has_native_cycle`."""
+        self._native_cycle(self._state, self._buf, _WORDS_PER_FETCH,
+                           self._posref, n_nodes, perm, free_cpu, free_mem,
+                           ready, n_pods, pod_perm, pod_cpu, pod_mem,
+                           bind_out)
 
     @property
     def has_native_cycle(self) -> bool:
@@ -301,7 +389,8 @@ class ExactShuffler:
     def draw_swaps(self, length: int) -> List[int]:
         """Consume exactly the words ``shuffle`` would for a list of
         ``length``, returning the Fisher-Yates targets ``[r_{L-1} ..
-        r_1]`` without applying them."""
+        r_1]`` without applying them.  Python backend only — the native
+        backend's word stream lives in the C state."""
         if length < 2:
             return []
         if length >= len(_SHIFT):
@@ -335,7 +424,7 @@ class ExactShuffler:
         n = len(x)
         if n < 2:
             return
-        if self._native is not None:
+        if self._fill is not None:
             perm = self._perm_pool.get(n)
             if perm is None:
                 perm = self._perm_pool[n] = self.make_perm(n)

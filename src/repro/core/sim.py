@@ -209,6 +209,7 @@ class Sim:
     def __init__(self, queue: Optional[str] = None):
         self.t = 0.0
         self.last_event_t = 0.0          # time of last processed event
+        self.run_wall_s = 0.0            # real seconds inside run() loops
         if queue is None:
             queue = os.environ.get("REPRO_SIM_QUEUE", "calendar")
         if queue not in QUEUE_BACKENDS:
@@ -243,6 +244,7 @@ class Sim:
         the clock stands at ``until`` (when given) even if the queue
         drained first; ``last_event_t`` keeps the drain time."""
         n = 0
+        wall0 = time.perf_counter()
         pop = self._q.pop_due
         while self._live > 0:
             item = pop(until)
@@ -262,6 +264,11 @@ class Sim:
                     f"loop never terminated; next pending notes: "
                     f"{notes if notes else '(unnamed events)'}")
         self.events_processed += n
+        # wall time of event processing only — ends with the last
+        # processed event (the clock's last_event_t), so throughput
+        # figures exclude setup before the loop and any epilogue after
+        # it (benchmarks divide events by this, see bench_scale)
+        self.run_wall_s += time.perf_counter() - wall0
         if until is not None and until > self.t:
             self.t = until
 

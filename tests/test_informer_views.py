@@ -1,0 +1,286 @@
+"""Zero-copy informer views + batched multi-grant admission (ISSUE 5).
+
+The 100k-workflow tier replaced per-write object snapshots with
+generation-stamped copy-on-write records, re-entrant per-grant
+admission walks with one batched multi-grant pass, and the
+getrandbits word pump with a native MT19937 core fused into the
+scheduler cycle.  None of it may move a single scheduling decision.
+These tests pin:
+
+* the PR-2 snapshot guarantee under sharing: no handler or lister
+  caller can EVER observe state written after its view was handed out
+  (property-checked over a contended run with evictions and quota
+  rejections in flight);
+* copy-on-write actually shares: steady-state resyncs materialize
+  ZERO copies, bump no generation, and keep cache identity;
+* binding-sequence hashes for the preempt / quota / drf presets,
+  recorded on the pre-views core (commit cf583ed), re-run with views,
+  the batched walk and the fused native cycle enabled;
+* native fused-cycle vs pure-Python cluster equivalence end-to-end;
+* batched multi-grant == the generic re-sort loop on a deep backlog
+  where single walk calls grant many requests, with and without the
+  merge orders' dynamic ranking.
+"""
+import hashlib
+
+import pytest
+
+from repro.configs.workflows import get_workflow_spec, wide_fanout
+from repro.core import calibration as cal
+import repro.core.cluster as cluster_mod
+from repro.core.cluster import Cluster, PodObj
+from repro.core.dag import make_workflow
+from repro.core.informer import InformerSet
+from repro.core.runner import ControlPlane
+from repro.core.sim import Sim
+
+# sha256 over the binding sequence "ns/pod->node@t" for the contended
+# scenario below, recorded on the pre-zero-copy core (commit cf583ed)
+# — the shared views, the batched walk and the fused native cycle must
+# not move a single binding
+PINNED_PRE_VIEWS = {
+    "preempt": ("e30b8c5ac24208619acd147ffb7338fcc9d9d8ee18ea920a7eef87e3a837a8db", 67),
+    "quota": ("3654b76a03ede03d0323758873d7f7ca6f982056a478358519e6e6a381162045", 66),
+    "drf": ("bbdd0e4cf84e2e21bba820f9bbb73adfd51470cc63b0bbdd3b158357a41f556d", 66),
+}
+
+
+def _views_plane(policy, seed=21):
+    plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                         cluster_cfg=cal.PaperCluster(n_nodes=2), seed=seed,
+                         usage_mode="event")
+    fan = make_workflow("fan", wide_fanout(width=10))
+    mont = make_workflow("montage", get_workflow_spec("montage"))
+    plane.add_stream(fan, repeats=2, tenant="hi", arrival="concurrent",
+                     concurrency=2, priority=8, weight=2.0)
+    plane.add_stream(mont, repeats=2, tenant="lo", arrival="poisson",
+                     rate=0.4, burst=2, priority=0, weight=1.0)
+    return plane
+
+
+def _run_bindings(plane):
+    seq = []
+    orig = plane.cluster._bind
+
+    def record(pod, node):
+        seq.append(f"{pod.namespace}/{pod.name}->{node.name}"
+                   f"@{plane.sim.now():.4f}")
+        orig(pod, node)
+
+    plane.cluster._bind = record
+    res = plane.run(horizon_s=500_000)
+    return seq, res
+
+
+@pytest.mark.parametrize("policy", sorted(PINNED_PRE_VIEWS))
+def test_binding_hashes_unmoved_by_views(policy):
+    seq, _res = _run_bindings(_views_plane(policy))
+    digest = hashlib.sha256("\n".join(seq).encode()).hexdigest()
+    want_digest, want_n = PINNED_PRE_VIEWS[policy]
+    assert len(seq) == want_n
+    assert digest == want_digest, \
+        f"zero-copy views moved the {policy!r} binding sequence"
+
+
+# ---------------------------------------------------------------------------
+# the snapshot guarantee under sharing
+# ---------------------------------------------------------------------------
+def _pod_fields(pod):
+    return (pod.name, pod.namespace, pod.phase, pod.node, pod.created,
+            pod.scheduled, pod.started, pod.finished, pod.deleted,
+            pod.cpu_m, pod.mem_mi, pod.tenant, pod.evicted,
+            pod.restarts)
+
+
+def test_no_caller_observes_future_live_state():
+    """Property: every object a handler or lister caller ever received
+    reads EXACTLY as it did at delivery, even though the live objects
+    kept mutating (binds, phase flips, evictions, deletions)."""
+    plane = _views_plane("preempt")
+    captured = []
+
+    def grab(pod):
+        captured.append((pod, _pod_fields(pod)))
+
+    plane.informers.pods.add_handlers(on_add=grab, on_update=grab,
+                                      on_delete=grab)
+
+    def probe():
+        for pod in plane.informers.pods.lister():
+            captured.append((pod, _pod_fields(pod)))
+        for node in plane.informers.nodes.lister():
+            captured.append((node, (node.name, node.ready, node.cpu_used,
+                                    node.mem_used)))
+        if plane.sim.now() < 180.0:
+            plane.sim.after(2.7, probe, daemon=True)
+
+    plane.sim.after(1.0, probe, daemon=True)
+    res = plane.run(horizon_s=500_000)
+    assert res.arbiter.preemptions > 0          # live objects DID mutate
+    assert len(captured) > 500
+    seen_phases = {f[2] for _p, f in captured if isinstance(_p, PodObj)}
+    assert {"Pending", "Running", "Succeeded"} <= seen_phases
+    for obj, fields in captured:
+        if isinstance(obj, PodObj):
+            assert _pod_fields(obj) == fields, \
+                "a handed-out pod view changed after delivery"
+        else:
+            assert (obj.name, obj.ready, obj.cpu_used, obj.mem_used) \
+                == fields, "a handed-out node view changed after delivery"
+
+
+def test_same_instant_transitions_deliver_distinct_views():
+    """A duration-0 (virtual) pod goes Running and Succeeded at the
+    same instant: the two MODIFIED events must carry two different
+    frozen views, not one shared object showing the later phase."""
+    plane = ControlPlane("kubeadaptor", seed=3)
+    wf = make_workflow("montage", get_workflow_spec("montage"))  # has entry/exit
+    phases = {}                                  # (ns, name) -> [phases]
+
+    def on_update(pod):
+        phases.setdefault((pod.namespace, pod.name), []).append(pod.phase)
+
+    plane.informers.pods.add_handlers(on_update=on_update)
+    plane.gateway.load([wf.with_instance(0)])
+    plane.run(horizon_s=500_000)
+    virt = [v for (ns, name), v in phases.items() if name in ("entry", "exit")]
+    assert virt and all(v[:2] == ["Running", "Succeeded"] for v in virt)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write actually shares
+# ---------------------------------------------------------------------------
+def test_steady_state_resync_is_zero_copy():
+    sim = Sim()
+    cluster = Cluster(sim)
+    informers = InformerSet(sim, cluster)
+    cluster.create_namespace("ns1")
+    sim.run()
+    cluster.create_pod(PodObj(name="p0", namespace="ns1", task_id="p0",
+                              workflow="w", cpu_m=100, mem_mi=100,
+                              duration_s=1e9))
+    # settle: bind + RUNNING transition + one resync materialize views
+    interval = cal.DEFAULT_PARAMS.resync_interval
+    sim.after(1.5 * interval, lambda: None)
+    sim.run(until=sim.now() + 1.5 * interval)
+    gen = informers.pods.generation
+    node_gen = informers.nodes.generation
+    ident = dict(informers.pods.cache)
+    copies0 = cluster_mod.SNAPSHOTS_MADE
+    # two more resync rounds with NOTHING changing
+    sim.after(2.2 * interval, lambda: None)
+    sim.run(until=sim.now() + 2.2 * interval)
+    assert cluster_mod.SNAPSHOTS_MADE == copies0, \
+        "steady-state resync materialized copies"
+    assert informers.pods.generation == gen      # listers stay valid
+    assert informers.nodes.generation == node_gen
+    assert dict(informers.pods.cache) == ident
+    for k, obj in informers.pods.cache.items():
+        assert obj is ident[k], "resync replaced an unchanged view"
+    # ... and the reconciler still works on top of the shared views
+    assert informers.pods.nonterminal_cpu == 100
+
+
+def test_views_share_between_watch_and_resync():
+    """The cache entry, the lister row and a captured watch object are
+    ONE object per (pod, revision) — that is the zero-copy claim."""
+    sim = Sim()
+    cluster = Cluster(sim)
+    informers = InformerSet(sim, cluster)
+    seen = []
+    informers.pods.add_handlers(on_add=seen.append, on_update=seen.append)
+    cluster.create_namespace("ns1")
+    sim.run()
+    cluster.create_pod(PodObj(name="p0", namespace="ns1", task_id="p0",
+                              workflow="w", cpu_m=100, mem_mi=100,
+                              duration_s=1e9))
+    sim.run(until=sim.now() + 40.0)       # includes a resync
+    assert seen
+    cached = informers.pods.cache[("ns1", "p0")]
+    assert cached is seen[-1]             # cache holds the delivered view
+    assert cached in informers.pods.lister()
+    assert cached is not cluster.pods[("ns1", "p0")]   # never the live obj
+
+
+# ---------------------------------------------------------------------------
+# fused native cycle == pure-Python cluster, end to end
+# ---------------------------------------------------------------------------
+def test_native_and_python_cluster_paths_identical():
+    import repro.core.shuffle as shuffle_mod
+    if shuffle_mod._load_native() is None:
+        pytest.skip("no native backend on this host")
+
+    def run_once():
+        return _run_bindings(_views_plane("drf"))[0]
+
+    native_seq = run_once()
+    saved = (shuffle_mod._native_lib, shuffle_mod._native_tried)
+    shuffle_mod._native_lib, shuffle_mod._native_tried = None, True
+    try:
+        python_seq = run_once()
+    finally:
+        shuffle_mod._native_lib, shuffle_mod._native_tried = saved
+    assert native_seq == python_seq
+
+
+# ---------------------------------------------------------------------------
+# batched multi-grant admission
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["fair-share", "drf", "quota"])
+def test_batched_walk_matches_generic_on_deep_backlog(policy):
+    """One walk call grants MANY requests (wide fanouts, roomy
+    cluster): the batched single-pass walk must reproduce the generic
+    per-grant re-sort loop's grant sequence exactly."""
+    import repro.core.resources as rs
+
+    def run(fast):
+        grants = []
+        orig_init = rs.AdmissionArbiter.__init__
+        orig_ck = rs.AdmissionArbiter._create_bookkeep
+
+        def pinit(self, *a, **k):
+            orig_init(self, *a, **k)
+            self._fast = fast
+
+        def pck(self, req):
+            grants.append((self.inf.pods.sim.now(), req.namespace,
+                           req.task.id))
+            return orig_ck(self, req)
+
+        rs.AdmissionArbiter.__init__ = pinit
+        rs.AdmissionArbiter._create_bookkeep = pck
+        try:
+            plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                                 cluster_cfg=cal.PaperCluster(n_nodes=4),
+                                 seed=17, usage_mode="event")
+            fan = make_workflow("fan", wide_fanout(width=24))
+            mont = make_workflow("montage", get_workflow_spec("montage"))
+            plane.add_stream(fan, repeats=2, tenant="a",
+                             arrival="concurrent", concurrency=2, weight=3.0)
+            plane.add_stream(fan.with_tenant("b"), repeats=2, tenant="b",
+                             arrival="concurrent", concurrency=2, weight=1.0)
+            plane.add_stream(mont, repeats=2, tenant="c", arrival="poisson",
+                             rate=0.5, burst=2, weight=2.0)
+            res = plane.run(horizon_s=500_000)
+            return (grants, res.arbiter.deferrals, res.arbiter.admitted,
+                    res.arbiter.grant_batches)
+        finally:
+            rs.AdmissionArbiter.__init__ = orig_init
+            rs.AdmissionArbiter._create_bookkeep = orig_ck
+
+    fast = run(True)
+    generic = run(False)
+    # identical grant sequence / deferral / admit counts ...
+    assert fast[:3] == generic[:3]
+    # ... and the fast walk genuinely multi-grants: far fewer admission
+    # rounds than grants (the generic loop re-enters per grant, so its
+    # batch counter is only bounded by the evaluate count)
+    assert 0 < fast[3] < fast[2]
+
+
+def test_grant_batches_counts_multi_grant_rounds():
+    plane = _views_plane("fifo")
+    res = plane.run(horizon_s=500_000)
+    arb = res.arbiter
+    assert 0 < arb.grant_batches <= arb.admitted
+    assert arb.admitted == sum(t.granted for t in arb.tenants.values())
