@@ -18,14 +18,14 @@ benchmarks/README.md).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_scale \
-        [--workflows 1000] [--nodes 100] \
-        [--tiers 1000x100,10000x1000,100000x1000] \
+        [--workflows 1000] [--nodes 100] [--workers 1] \
+        [--tiers 1000x100,10000x1000,100000x1000,1000000x8000x8] \
         [--seed 42] [--policies fifo,priority,fair-share,drf,quota,preempt] \
         [--queue calendar|heap] [--usage-mode event|sampled] \
         [--lifecycle fast|chained] [--trace examples/trace_mixed.json] \
         [--out BENCH_scale.json] [--budget-s 0] [--profile] \
         [--min-events-per-sec 0] [--max-events-per-pod 0] \
-        [--max-peak-rss-mib 0]
+        [--max-peak-rss-mib 0] [--max-shard-rss-mib 0] [--shard-procs 0]
 
 ``--budget-s`` exits 2 when total wall time exceeds the budget;
 ``--min-events-per-sec`` / ``--max-events-per-pod`` /
@@ -47,6 +47,25 @@ sim's event-loop wall time (``Sim.run_wall_s``, which ends at
 setup, result assembly and post-completion drain no longer understate
 throughput on short tiers or pollute cross-tier comparisons.
 ``wall_s`` stays the full run wall (the budget gate's basis).
+
+Sharded control plane (ISSUE 6): ``--workers N`` (or a third tier
+component, ``WFxNODESxWORKERS``) partitions the scenario's tenants
+across N arbiter shards (``repro.core.shard``): 2·topologies streams
+*per worker* (tenants ``{topo}-{klass}{j}``, which the crc32 partition
+spreads evenly), each shard owning a disjoint node slice and running
+its own event loop in a forked worker process.  Sharded rows report
+``workers``, per-shard ``shards[]`` rows, per-shard self-reported
+``peak_rss_mib`` and the fork-proof ``total_peak_rss_mib`` (parent
+RSS + Σ shard self-reports — the ``--max-peak-rss-mib`` gate reads
+this, so forking cannot hide memory; ``--max-shard-rss-mib`` gates
+each shard's own peak).  ``events_per_sec`` on a sharded row is
+Σ shard events / max shard loop-wall with at most ``--shard-procs``
+loops running concurrently (weak-scaling aggregate — see
+benchmarks/README.md); ``wall_s`` stays the true end-to-end wall and
+``loop_cpu_s`` the CPU-second basis.  ``--profile`` collects each
+shard's own cProfile and prints the top-20 labeled by shard.
+``workers=1`` takes the unsharded in-process path, byte-identical to
+v3 behavior.
 
 Admission-pipeline policies (ISSUE 4): ``--policies`` also accepts
 ``drf`` (dominant-resource fair share), ``quota`` (fifo ordering with
@@ -89,7 +108,7 @@ BATCH_DEADLINE_S = 3600.0
 # (sum over the 8 streams = 120%, so caps genuinely bind under load)
 PROD_QUOTA_FRAC = 0.20
 BATCH_QUOTA_FRAC = 0.10
-SCHEMA = "bench_scale/v3"
+SCHEMA = "bench_scale/v4"
 
 
 def _plane_kwargs(usage_mode, queue, lifecycle):
@@ -110,46 +129,65 @@ def _plane_kwargs(usage_mode, queue, lifecycle):
 
 
 def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
-                queue=None, lifecycle=None, trace=None):
-    plane = ControlPlane("kubeadaptor", admission_policy=policy,
-                         cluster_cfg=cal.PaperCluster(n_nodes=n_nodes),
-                         seed=seed,
-                         **_plane_kwargs(usage_mode, queue, lifecycle))
+                queue=None, lifecycle=None, trace=None, workers=1,
+                shard_procs=None, processes=True, profile=False):
+    if workers > 1:
+        from repro.core.shard import ShardedControlPlane
+        plane = ShardedControlPlane(
+            workers, admission_policy=policy,
+            cluster_cfg=cal.PaperCluster(n_nodes=n_nodes), seed=seed,
+            fold_completed=True, capture_trace=False,
+            shard_procs=shard_procs, processes=processes, profile=profile,
+            **_plane_kwargs(usage_mode, queue, lifecycle))
+    else:
+        plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                             cluster_cfg=cal.PaperCluster(n_nodes=n_nodes),
+                             seed=seed,
+                             **_plane_kwargs(usage_mode, queue, lifecycle))
     if trace is not None:
         plane.add_trace(trace.get("arrivals", []),
                         tenants=trace.get("tenants"))
         return plane
-    n_streams = 2 * len(TOPOLOGIES)
+    # sharded scenarios scale the stream count with the shard count —
+    # 2·topologies streams per worker, tenant names "{topo}-{klass}{j}"
+    # (the crc32 partition spreads each such family across all shards
+    # exactly evenly, so every shard sees the full topology/class mix)
+    n_streams = 2 * len(TOPOLOGIES) * (workers if workers > 1 else 1)
     per, rem = divmod(n_workflows, n_streams)
     # enough closed-loop concurrency to keep ~666 pod slots/100 nodes busy
     conc = max(2, (n_nodes * 7) // (n_streams * 4))
     total_cpu_m = n_nodes * cal.PaperCluster.node_cpu_m
+    # quota caps bind against what a stream's arbiter can actually see:
+    # its own shard's slice of the cluster (= the whole cluster at
+    # workers=1), keeping per-shard contention geometry tier-invariant
+    quota_cpu_m = total_cpu_m // workers if workers > 1 else total_cpu_m
     quotas = {"prod": 0, "batch": 0}
     if policy == "quota":           # caps only bind under the quota preset
-        quotas = {"prod": int(PROD_QUOTA_FRAC * total_cpu_m),
-                  "batch": int(BATCH_QUOTA_FRAC * total_cpu_m)}
+        quotas = {"prod": int(PROD_QUOTA_FRAC * quota_cpu_m),
+                  "batch": int(BATCH_QUOTA_FRAC * quota_cpu_m)}
     deadlines = {"prod": PROD_DEADLINE_S, "batch": BATCH_DEADLINE_S}
     i = 0
     for topo in TOPOLOGIES:
         wf = make_workflow(topo, get_workflow_spec(topo))
         for klass, prio, weight in (("prod", 10, 3.0), ("batch", 0, 1.0)):
-            repeats = per + (1 if i < rem else 0)
-            extra = {}
-            if quotas[klass]:
-                extra["quota_cpu_m"] = quotas[klass]
-            if _add_stream_accepts("deadline_s"):
-                extra["deadline_s"] = deadlines[klass]
-            if klass == "prod":     # closed-loop interactive tenant
-                plane.add_stream(wf, repeats=repeats,
-                                 tenant=f"{topo}-{klass}",
-                                 arrival="concurrent", concurrency=conc,
-                                 priority=prio, weight=weight, **extra)
-            else:                   # open-loop surge: deep pending queue
-                plane.add_stream(wf, repeats=repeats,
-                                 tenant=f"{topo}-{klass}",
-                                 arrival="poisson", rate=0.5, burst=2,
-                                 priority=prio, weight=weight, **extra)
-            i += 1
+            for j in range(workers if workers > 1 else 1):
+                tenant = (f"{topo}-{klass}{j}" if workers > 1
+                          else f"{topo}-{klass}")
+                repeats = per + (1 if i < rem else 0)
+                extra = {}
+                if quotas[klass]:
+                    extra["quota_cpu_m"] = quotas[klass]
+                if _add_stream_accepts("deadline_s"):
+                    extra["deadline_s"] = deadlines[klass]
+                if klass == "prod":     # closed-loop interactive tenant
+                    plane.add_stream(wf, repeats=repeats, tenant=tenant,
+                                     arrival="concurrent", concurrency=conc,
+                                     priority=prio, weight=weight, **extra)
+                else:                   # open-loop surge: deep pending queue
+                    plane.add_stream(wf, repeats=repeats, tenant=tenant,
+                                     arrival="poisson", rate=0.5, burst=2,
+                                     priority=prio, weight=weight, **extra)
+                i += 1
     return plane
 
 
@@ -159,7 +197,13 @@ def _add_stream_accepts(name):
 
 def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
                usage_mode="event", queue=None, lifecycle=None, trace=None,
-               profile=False):
+               profile=False, workers=1, shard_procs=None):
+    if workers > 1:
+        return _run_policy_sharded(
+            policy, n_workflows, n_nodes, seed, horizon_s=horizon_s,
+            usage_mode=usage_mode, queue=queue, lifecycle=lifecycle,
+            trace=trace, profile=profile, workers=workers,
+            shard_procs=shard_procs)
     plane = build_plane(policy, n_workflows, n_nodes, seed,
                         usage_mode=usage_mode, queue=queue,
                         lifecycle=lifecycle, trace=trace)
@@ -215,6 +259,16 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
         "deferrals": res.arbiter.deferrals,
         "peak_rss_mib": round(
             resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024, 1),
+        # fork-proof memory accounting (ISSUE 6): even an unsharded run
+        # reports the children's high-water mark, so work moved into
+        # forked processes can never slip past the --max-peak-rss-mib
+        # gate (total = parent + reaped-children peak; 0 children here)
+        "rusage_children_mib": round(
+            resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss / 1024, 1),
+        "total_peak_rss_mib": round(
+            (resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+             + resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss)
+            / 1024, 1),
         "tenant_makespan_s": {
             t: round(s["makespan"], 2)
             for t, s in summary_by_tenant.items()},
@@ -261,18 +315,139 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
     return rec
 
 
+def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
+                        horizon_s=400_000.0, usage_mode="event", queue=None,
+                        lifecycle=None, trace=None, profile=False,
+                        workers=2, shard_procs=None):
+    """One policy run through the tenant-partitioned control plane
+    (repro.core.shard): same row schema as the unsharded path plus
+    ``workers`` / ``shards[]`` / fork-proof RSS totals."""
+    import os as _os
+
+    plane = build_plane(policy, n_workflows, n_nodes, seed,
+                        usage_mode=usage_mode, queue=queue,
+                        lifecycle=lifecycle, trace=trace, workers=workers,
+                        shard_procs=shard_procs, profile=profile)
+    t0 = time.perf_counter()
+    res = plane.run(horizon_s=horizon_s)
+    wall = time.perf_counter() - t0
+    if profile:
+        for s in res.shards:
+            if s["profile"]:
+                print(f"--- profile [{n_workflows}wf/{n_nodes}n {policy} "
+                      f"shard {s['shard']}] top-20 by cumulative time ---",
+                      flush=True)
+                print(s["profile"], flush=True)
+    summary_by_tenant = res.tenant_summary()
+    arb = res.arbiter_totals()
+    parent_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    children_rss = \
+        resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss / 1024
+    # the gate-bearing total: parent + every shard's own self-reported
+    # peak (RUSAGE_CHILDREN only keeps the max over reaped children and
+    # accumulates across the sweep — reported for cross-checking)
+    total_rss = parent_rss + sum(s["peak_rss_mib"] for s in res.shards)
+    events = res.events
+    pods = res.pods_created
+    loop_wall = res.loop_wall_s
+    loop_cpu = res.loop_cpu_s
+    rec = {
+        "policy": policy,
+        "workers": workers,
+        "shard_procs": min(shard_procs or _os.cpu_count() or 1, workers),
+        "wall_s": round(wall, 3),
+        "loop_wall_s": round(loop_wall, 3),
+        "loop_cpu_s": round(loop_cpu, 3),
+        "sim_makespan_s": round(res.sim_makespan_s, 2),
+        "events": events,
+        # weak-scaling aggregate: sum of shard events over the slowest
+        # shard's loop wall, each loop unoversubscribed (shard_procs
+        # waves) — see benchmarks/README.md; wall_s is end-to-end truth
+        "events_per_sec": (round(events / loop_wall)
+                           if events and loop_wall else None),
+        "events_per_cpu_sec": (round(events / loop_cpu)
+                               if events and loop_cpu else None),
+        "pods_created": pods,
+        "events_per_pod": (round(events / pods, 2)
+                           if events and pods else None),
+        "queue": res.shards[0]["queue"],
+        "usage_mode": res.shards[0]["usage_mode"],
+        "lifecycle": res.shards[0]["lifecycle"],
+        "peak_pending_admission": res.peak_pending_admission,
+        "peak_pending_pods": res.peak_pending_pods,
+        "completed_workflows": res.completed_workflows,
+        "failed_workflows": res.failed_workflows,
+        "api_calls": res.api_calls,
+        "admitted": arb.get("admitted", 0),
+        "deferrals": arb.get("deferrals", 0),
+        "peak_rss_mib": round(parent_rss, 1),
+        "rusage_children_mib": round(children_rss, 1),
+        "total_peak_rss_mib": round(total_rss, 1),
+        "peak_shard_rss_mib": round(res.peak_shard_rss_mib, 1),
+        "tenant_makespan_s": {
+            t: round(s["makespan"], 2)
+            for t, s in summary_by_tenant.items()},
+        "preemptions": arb.get("preemptions", 0),
+        "quota_rejects": arb.get("quota_rejects", 0),
+        "grant_batches": arb.get("grant_batches", 0),
+        "informer_copies": res.informer_copies,
+        "shards": [{
+            "shard": s["shard"],
+            "nodes": s["nodes"],
+            "seed": s["seed"],
+            "tenants": len(s["tenants"]),
+            "wall_s": round(s["wall_s"], 3),
+            "loop_wall_s": round(s["loop_wall_s"], 3),
+            "loop_cpu_s": round(s["loop_cpu_s"], 3),
+            "sim_makespan_s": round(s["last_event_t"], 2),
+            "events": s["events"],
+            "events_per_sec": (round(s["events"] / s["loop_wall_s"])
+                               if s["loop_wall_s"] else None),
+            "pods_created": s["pods_created"],
+            "completed_workflows": s["completed_workflows"],
+            "failed_workflows": s["failed_workflows"],
+            "peak_pending_admission": s["arbiter"].get("max_pending", 0),
+            "peak_pending_pods": s["peak_pending_pods"],
+            "peak_rss_mib": round(s["peak_rss_mib"], 1),
+        } for s in res.shards],
+    }
+    slo = {t: {"deadline_s": s["deadline_s"],
+               "hit_rate": (round(s["deadline_hit_rate"], 4)
+                            if s["deadline_hit_rate"] == s["deadline_hit_rate"]
+                            else None)}
+           for t, s in summary_by_tenant.items() if "deadline_s" in s}
+    if slo:
+        rec["slo"] = slo
+    cpu = res.usage_summary().get("cpu")
+    if cpu:
+        # merged across shard slices: rates normalized per slice, so
+        # mean is the time-weighted mean slice utilization and peak the
+        # max per-slice peak (basis "event" + merged shard windows)
+        rec["cpu_usage"] = {k: (round(v, 4) if isinstance(v, float) else v)
+                            for k, v in cpu.items()}
+    if res.exec_stat is not None and res.exec_stat.count:
+        rec["pod_exec_s"] = {"count": res.exec_stat.count,
+                             "mean": round(res.exec_stat.mean, 2),
+                             "max": round(res.exec_stat.max, 2),
+                             "p95": round(res.exec_stat.percentile(95), 2)}
+    return rec
+
+
 def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
                  queue=None, lifecycle=None, trace=None, trace_path=None,
-                 profile=False):
+                 profile=False, workers=1, shard_procs=None):
     runs = [run_policy(p, n_workflows, n_nodes, seed, usage_mode=usage_mode,
                        queue=queue, lifecycle=lifecycle, trace=trace,
-                       profile=profile)
+                       profile=profile, workers=workers,
+                       shard_procs=shard_procs)
             for p in policies]
     scenario = {"workflows": n_workflows, "nodes": n_nodes,
                 "node_cpu_m": cal.PaperCluster.node_cpu_m,
                 "node_mem_mi": cal.PaperCluster.node_mem_mi,
                 "seed": seed, "topologies": list(TOPOLOGIES),
-                "streams": 2 * len(TOPOLOGIES)}
+                "streams": 2 * len(TOPOLOGIES) * max(1, workers)}
+    if workers > 1:
+        scenario["workers"] = workers
     if trace is not None:
         arrivals = trace.get("arrivals", [])
         scenario.update({"trace": trace_path,
@@ -304,10 +479,15 @@ def _parse_tiers(args):
     if args.tiers:
         out = []
         for part in args.tiers.split(","):
-            wf, _, nodes = part.partition("x")
-            out.append((int(wf), int(nodes)))
+            fields = part.split("x")
+            if len(fields) not in (2, 3):
+                raise SystemExit(f"bad tier {part!r}: want WFxNODES or "
+                                 f"WFxNODESxWORKERS")
+            wf, nodes = int(fields[0]), int(fields[1])
+            workers = int(fields[2]) if len(fields) == 3 else args.workers
+            out.append((wf, nodes, workers))
         return out
-    return [(args.workflows, args.nodes)]
+    return [(args.workflows, args.nodes, args.workers)]
 
 
 def main():
@@ -315,8 +495,16 @@ def main():
     ap.add_argument("--workflows", type=int, default=1000)
     ap.add_argument("--nodes", type=int, default=100)
     ap.add_argument("--tiers", default="",
-                    help="comma list of WFxNODES (e.g. 1000x100,10000x1000,"
-                         "100000x1000); overrides --workflows/--nodes")
+                    help="comma list of WFxNODES or WFxNODESxWORKERS "
+                         "(e.g. 1000x100,10000x1000,1000000x8000x8); "
+                         "overrides --workflows/--nodes/--workers")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="tenant-partitioned arbiter shards (forked "
+                         "worker processes); 1 = unsharded legacy path")
+    ap.add_argument("--shard-procs", type=int, default=0,
+                    help="max shard processes running at once (default "
+                         "cpu count): shards run in unoversubscribed "
+                         "waves — see README on events_per_sec")
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--policies", default=",".join(POLICIES))
     ap.add_argument("--queue", default="",
@@ -338,7 +526,11 @@ def main():
     ap.add_argument("--max-peak-rss-mib", type=float, default=0.0,
                     help="fail (exit 2) if any run's peak RSS exceeds this "
                          "(process-lifetime high-water mark: budget the "
-                         "whole sweep)")
+                         "whole sweep; sharded runs are gated on "
+                         "total_peak_rss_mib = parent + all shards)")
+    ap.add_argument("--max-shard-rss-mib", type=float, default=0.0,
+                    help="fail (exit 2) if any single shard's "
+                         "self-reported peak RSS exceeds this")
     ap.add_argument("--profile", action="store_true",
                     help="cProfile each policy run and print the top-20 "
                          "cumulative-time hotspots")
@@ -350,17 +542,19 @@ def main():
         with open(args.trace) as f:
             trace = json.load(f)
     tiers = []
-    for n_wf, n_nodes in _parse_tiers(args):
+    for n_wf, n_nodes, n_workers in _parse_tiers(args):
         tier = run_scenario(n_wf, n_nodes, args.seed, policies,
                             usage_mode=args.usage_mode,
                             queue=args.queue or None,
                             lifecycle=args.lifecycle or None,
                             trace=trace, trace_path=args.trace or None,
-                            profile=args.profile)
+                            profile=args.profile, workers=n_workers,
+                            shard_procs=args.shard_procs or None)
         tiers.append(tier)
         n_wf = tier["scenario"]["workflows"]
+        shard_tag = f"/{n_workers}w" if n_workers > 1 else ""
         for r in tier["runs"]:
-            print(f"[{n_wf}wf/{n_nodes}n] {r['policy']:>11}: "
+            print(f"[{n_wf}wf/{n_nodes}n{shard_tag}] {r['policy']:>11}: "
                   f"wall={r['wall_s']:.1f}s "
                   f"makespan={r['sim_makespan_s']:.0f}s "
                   f"events/s={r['events_per_sec']} "
@@ -399,11 +593,19 @@ def main():
                 failures.append(
                     f"EVENT-COST CEILING: {label} {r['events_per_pod']} "
                     f"events/pod > {args.max_events_per_pod:.1f}")
-            if (args.max_peak_rss_mib and r["peak_rss_mib"]
-                    and r["peak_rss_mib"] > args.max_peak_rss_mib):
+            gate_rss = r.get("total_peak_rss_mib") or r["peak_rss_mib"]
+            if (args.max_peak_rss_mib and gate_rss
+                    and gate_rss > args.max_peak_rss_mib):
                 failures.append(
-                    f"RSS CEILING: {label} {r['peak_rss_mib']} MiB "
+                    f"RSS CEILING: {label} {gate_rss} MiB "
                     f"> {args.max_peak_rss_mib:.0f} MiB")
+            if args.max_shard_rss_mib:
+                for s in r.get("shards", []):
+                    if s["peak_rss_mib"] > args.max_shard_rss_mib:
+                        failures.append(
+                            f"SHARD RSS CEILING: {label} shard "
+                            f"{s['shard']} {s['peak_rss_mib']} MiB "
+                            f"> {args.max_shard_rss_mib:.0f} MiB")
     if failures:
         for msg in failures:
             print(msg, file=sys.stderr)

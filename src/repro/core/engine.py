@@ -372,6 +372,13 @@ class KubeAdaptorEngine:
             self.metrics.note_ns_deleted(ws.wf)
             self.volumes.release(ws.ns)
             self.events.emit(event, ws.wf)
+            # drop the per-workflow state only now: ns deletion takes
+            # ns_delete_latency (≫ informer latency), so every in-flight
+            # pod-update delivery for this namespace has already landed —
+            # deleting at teardown start would change _mine()/_pod_updated
+            # behavior for those late events.  Keeps engine memory
+            # O(in-flight), not O(total workflows) (1M-workflow tier).
+            self._ws.pop(ws.ns, None)
             if self.on_workflow_done:
                 self.on_workflow_done(ws.wf)
 

@@ -138,7 +138,8 @@ class WorkflowGateway:
     """
 
     def __init__(self, sim: Sim, send_to: Callable[[Workflow], None],
-                 grpc_latency: float = GRPC_LATENCY, seed: int = 0):
+                 grpc_latency: float = GRPC_LATENCY, seed: int = 0,
+                 capture_trace: bool = True):
         self.sim = sim
         self.send_to = send_to
         self.grpc_latency = grpc_latency
@@ -150,7 +151,10 @@ class WorkflowGateway:
         self._instances: Dict[str, int] = {}     # workflow name -> next id
         self._started = False
         # every dispatch as (virtual t, tenant, topology) — the raw
-        # material of record_trace (one small tuple per workflow)
+        # material of record_trace (one small tuple per workflow).
+        # capture_trace=False skips the log (record_trace unavailable):
+        # at 1M workflows the tuples alone cost ~100 MB per shard.
+        self.capture_trace = capture_trace
         self.trace_log: List[tuple] = []
 
     # -- stream registration ----------------------------------------------
@@ -241,7 +245,8 @@ class WorkflowGateway:
         stream.sent += 1
         self.sent += 1
         self._by_ns[wf.namespace()] = stream
-        self.trace_log.append((self.sim.now(), wf.tenant, wf.name))
+        if self.capture_trace:
+            self.trace_log.append((self.sim.now(), wf.tenant, wf.name))
         self.sim.after(self.grpc_latency, lambda: self.send_to(wf))
 
     def _schedule_arrival(self, stream: _Stream):
@@ -271,7 +276,9 @@ class WorkflowGateway:
                 stream.sent += 1
                 self.sent += 1
                 self._by_ns[wf.namespace()] = stream
-                self.trace_log.append((self.sim.now(), wf.tenant, wf.name))
+                if self.capture_trace:
+                    self.trace_log.append(
+                        (self.sim.now(), wf.tenant, wf.name))
                 self.sim.after(self.grpc_latency,
                                lambda w=wf: self.send_to(w))
             self._schedule_trace(stream)
@@ -291,6 +298,9 @@ class WorkflowGateway:
         paper topologies).  Tenant shares (priority / weight / quota
         caps / deadline) come from the registered stream specs.
         """
+        if not self.capture_trace and self.sent:
+            raise RuntimeError("record_trace needs capture_trace=True — "
+                               "this gateway was built with capture off")
         tenants: Dict[str, dict] = {}
         for stream in self.streams:
             spec = stream.spec

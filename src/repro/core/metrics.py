@@ -39,10 +39,23 @@ tenant), from which mean/peak/p95 rates are derived in closed form via
 ``sample_mode`` flavours unchanged); tests pin that the two modes
 agree on mean/peak and that removing the daemon moves no scheduling
 decision.
+
+Sharded control plane (ISSUE 6): per-tenant aggregation is
+*foldable* and *mergeable*.  ``fold_completed=True`` collapses each
+``WorkflowRecord`` into a compact per-tenant ``TenantAgg`` the moment
+its namespace is deleted (O(tenants) memory instead of O(workflows) —
+the 1M-workflow tier would otherwise hold a million records).
+``export_partial()`` emits a picklable ``MetricsPartial`` (tenant
+aggregates + usage-rate accumulators) that travels over the shard
+result pipe; ``MetricsPartial.merge`` unions shard partials (tenants
+are shard-disjoint, so per-tenant merge is key-union; usage windows
+concatenate via ``StepAccumulator.merge``) and reproduces the global
+``tenant_summary`` / ``usage_summary`` shapes.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import math
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import calibration as cal
@@ -80,6 +93,185 @@ class WorkflowRecord:
         if self.submitted_at < 0 or self.first_create < 0:
             return float("nan")
         return self.first_create - self.submitted_at
+
+
+@dataclass
+class TenantAgg:
+    """Compact per-tenant aggregate — everything ``tenant_summary``
+    derives from the record list, folded to O(1) scalars so completed
+    ``WorkflowRecord``s can be dropped (``fold_completed``) and shard
+    partials merged.  Field bases mirror ``tenant_summary`` exactly:
+    makespan spans records with a deleted namespace *including* failed
+    ones; queue-delay / lifecycle / deadline hits cover completed
+    (non-failed) records only; preempted/retries span all records."""
+    workflows: int = 0
+    completed: int = 0
+    failed: int = 0
+    mk_t0: float = math.inf       # min submission (fallback ns_created)
+    mk_t1: float = -math.inf      # max namespace deletion
+    qd_sum: float = 0.0
+    qd_n: int = 0
+    lc_sum: float = 0.0
+    lc_n: int = 0
+    preempted: int = 0
+    retries: int = 0
+    deadline_hits: int = 0
+
+    def fold(self, rec: "WorkflowRecord", deadline_s: float = 0.0):
+        self.workflows += 1
+        self.preempted += rec.preempted
+        self.retries += rec.retries
+        if rec.failed:
+            self.failed += 1
+        if rec.ns_deleted > 0:
+            t0 = rec.submitted_at if rec.submitted_at >= 0 else rec.ns_created
+            if t0 < self.mk_t0:
+                self.mk_t0 = t0
+            if rec.ns_deleted > self.mk_t1:
+                self.mk_t1 = rec.ns_deleted
+            if not rec.failed:
+                self.completed += 1
+                qd = rec.queue_delay
+                if qd == qd:                       # drop NaN
+                    self.qd_sum += qd
+                    self.qd_n += 1
+                self.lc_sum += rec.lifecycle
+                self.lc_n += 1
+                if (deadline_s > 0 and rec.submitted_at >= 0
+                        and rec.ns_deleted - rec.submitted_at
+                        <= deadline_s + 1e-9):
+                    self.deadline_hits += 1
+
+    def merge(self, other: "TenantAgg") -> "TenantAgg":
+        self.workflows += other.workflows
+        self.completed += other.completed
+        self.failed += other.failed
+        self.mk_t0 = min(self.mk_t0, other.mk_t0)
+        self.mk_t1 = max(self.mk_t1, other.mk_t1)
+        self.qd_sum += other.qd_sum
+        self.qd_n += other.qd_n
+        self.lc_sum += other.lc_sum
+        self.lc_n += other.lc_n
+        self.preempted += other.preempted
+        self.retries += other.retries
+        self.deadline_hits += other.deadline_hits
+        return self
+
+    def summary_row(self, deferrals: int = 0, quota_rejects: int = 0,
+                    deadline_s: float = 0.0) -> Dict[str, float]:
+        """One ``tenant_summary`` row — same keys, same NaN semantics."""
+        row = {
+            "workflows": float(self.workflows),
+            "completed": float(self.completed),
+            "failed": float(self.failed),
+            "makespan": (self.mk_t1 - self.mk_t0
+                         if self.mk_t1 > -math.inf else float("nan")),
+            "avg_queue_delay": (self.qd_sum / self.qd_n
+                                if self.qd_n else float("nan")),
+            "avg_lifecycle": (self.lc_sum / self.lc_n
+                              if self.lc_n else float("nan")),
+            "admission_deferrals": float(deferrals),
+            "quota_rejects": float(quota_rejects),
+            "preempted": float(self.preempted),
+        }
+        if deadline_s > 0:
+            row["deadline_s"] = deadline_s
+            row["deadline_hits"] = float(self.deadline_hits)
+            row["deadline_hit_rate"] = (self.deadline_hits / self.completed
+                                        if self.completed else float("nan"))
+        return row
+
+
+@dataclass
+class MetricsPartial:
+    """Picklable shard extract of a ``MetricsCollector``.
+
+    ``usage`` holds *rate-normalized* accumulators (levels divided by
+    the exporting shard's allocatable), so merging concatenates the
+    shards' utilization-rate step functions: the merged mean is the
+    time-weighted mean utilization across shard slices (equal to the
+    cluster-wide rate for equal slices), the merged peak is the max
+    per-slice peak.  Tenants are shard-disjoint under the crc32
+    partition, so tenant maps merge by key-union (same-key collisions
+    still compose correctly via ``TenantAgg.merge``).
+    """
+    tenant_aggs: Dict[str, TenantAgg] = field(default_factory=dict)
+    admission_deferrals: Dict[str, int] = field(default_factory=dict)
+    quota_rejects: Dict[str, int] = field(default_factory=dict)
+    tenant_deadlines: Dict[str, float] = field(default_factory=dict)
+    usage: Dict[str, StepAccumulator] = field(default_factory=dict)
+    usage_basis: str = "event"
+
+    def merge(self, other: "MetricsPartial") -> "MetricsPartial":
+        for tenant, agg in other.tenant_aggs.items():
+            mine = self.tenant_aggs.get(tenant)
+            if mine is None:
+                self.tenant_aggs[tenant] = replace(agg)
+            else:
+                mine.merge(agg)
+        for src, dst in ((other.admission_deferrals, self.admission_deferrals),
+                         (other.quota_rejects, self.quota_rejects)):
+            for tenant, n in src.items():
+                dst[tenant] = dst.get(tenant, 0) + n
+        self.tenant_deadlines.update(other.tenant_deadlines)
+        for key, acc in other.usage.items():
+            mine = self.usage.get(key)
+            if mine is None:
+                self.usage[key] = _copy_acc(acc)
+            else:
+                mine.merge(acc)
+        return self
+
+    def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        return {
+            tenant: self.tenant_aggs[tenant].summary_row(
+                deferrals=self.admission_deferrals.get(tenant, 0),
+                quota_rejects=self.quota_rejects.get(tenant, 0),
+                deadline_s=self.tenant_deadlines.get(tenant, 0.0))
+            for tenant in sorted(self.tenant_aggs)
+        }
+
+    def usage_summary(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for key, acc in self.usage.items():
+            out[key] = {"basis": self.usage_basis, "changes": acc.changes,
+                        "mean_rate": acc.mean(),
+                        "peak_rate": acc.peak,
+                        "p95_rate": acc.percentile(95)}
+        return out
+
+    @property
+    def completed(self) -> int:
+        return sum(a.completed for a in self.tenant_aggs.values())
+
+    @property
+    def failed(self) -> int:
+        return sum(a.failed for a in self.tenant_aggs.values())
+
+    @property
+    def workflows(self) -> int:
+        return sum(a.workflows for a in self.tenant_aggs.values())
+
+
+def _copy_acc(acc: StepAccumulator) -> StepAccumulator:
+    out = StepAccumulator(t0=acc.start_t, level=acc.level)
+    out.peak = acc.peak
+    out.last_t = acc.last_t
+    out.level_dur = dict(acc.level_dur)
+    out.changes = acc.changes
+    return out
+
+
+def _rate_acc(acc: StepAccumulator, alloc: float) -> StepAccumulator:
+    """Rebase an absolute-level accumulator to utilization rates
+    (divide by allocatable) on a window starting at 0."""
+    out = StepAccumulator(t0=0.0, level=acc.level / alloc if alloc else 0.0)
+    out.peak = acc.peak / alloc if alloc else 0.0
+    out.last_t = acc.total_time
+    out.level_dur = {lv / alloc: d for lv, d in acc.level_dur.items()} \
+        if alloc else {}
+    out.changes = acc.changes
+    return out
 
 
 class _ContentionTracker:
@@ -122,7 +314,8 @@ class MetricsCollector:
     def __init__(self, sim: Sim, cluster: Cluster,
                  params: cal.ClusterParams = cal.DEFAULT_PARAMS,
                  sample_mode: str = "full",
-                 usage_mode: str = "sampled"):
+                 usage_mode: str = "sampled",
+                 fold_completed: bool = False):
         if sample_mode not in ("full", "streaming"):
             raise ValueError(f"unknown sample_mode {sample_mode!r}")
         if usage_mode not in ("sampled", "event"):
@@ -132,6 +325,8 @@ class MetricsCollector:
         self.p = params
         self.sample_mode = sample_mode
         self.usage_mode = usage_mode
+        self.fold_completed = fold_completed
+        self.tenant_aggs: Dict[str, TenantAgg] = {}
         self.workflows: Dict[Tuple[str, int], WorkflowRecord] = {}
         self.samples: List[Tuple[float, int, int]] = []   # (t, cpu_m, mem_mi)
         self.tenant_samples: List[Tuple[float, Dict[str, int]]] = []
@@ -228,7 +423,14 @@ class MetricsCollector:
         self.wf_record(wf).ns_created = self.sim.now()
 
     def note_ns_deleted(self, wf: Workflow):
-        self.wf_record(wf).ns_deleted = self.sim.now()
+        rec = self.wf_record(wf)
+        rec.ns_deleted = self.sim.now()
+        if self.fold_completed:
+            agg = self.tenant_aggs.get(rec.tenant)
+            if agg is None:
+                agg = self.tenant_aggs[rec.tenant] = TenantAgg()
+            agg.fold(rec, self.tenant_deadlines.get(rec.tenant, 0.0))
+            del self.workflows[(rec.name, rec.instance)]
 
     def note_start(self, wf: Workflow, task_id: str):
         self.wf_record(wf).starts.append((self.sim.now(), task_id))
@@ -495,7 +697,44 @@ class MetricsCollector:
             return {}
         return {t: sum(s[t] for s in window) / len(window) for t in tenants}
 
+    def _folded_aggs(self) -> Dict[str, TenantAgg]:
+        """Per-tenant aggregates: folded completions + a non-mutating
+        fold of whatever records are still live (insertion order, so
+        float sums match the record-list path bit-for-bit)."""
+        aggs = {t: replace(a) for t, a in self.tenant_aggs.items()}
+        for rec in self.workflows.values():
+            agg = aggs.get(rec.tenant)
+            if agg is None:
+                agg = aggs[rec.tenant] = TenantAgg()
+            agg.fold(rec, self.tenant_deadlines.get(rec.tenant, 0.0))
+        return aggs
+
+    def export_partial(self) -> MetricsPartial:
+        """Compact picklable extract for the shard result pipe."""
+        usage: Dict[str, StepAccumulator] = {}
+        basis = "event"
+        cpu_a, mem_a = self.cluster.allocatable()
+        if self.usage_mode == "event":
+            self._close_accs()
+            usage["cpu"] = _rate_acc(self.cpu_acc, cpu_a)
+            usage["mem"] = _rate_acc(self.mem_acc, mem_a)
+        return MetricsPartial(
+            tenant_aggs=self._folded_aggs(),
+            admission_deferrals=dict(self.admission_deferrals),
+            quota_rejects=dict(self.quota_rejects),
+            tenant_deadlines=dict(self.tenant_deadlines),
+            usage=usage, usage_basis=basis)
+
     def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        if self.fold_completed:
+            # record list is partial by design — go through the aggs
+            return {
+                tenant: agg.summary_row(
+                    deferrals=self.admission_deferrals.get(tenant, 0),
+                    quota_rejects=self.quota_rejects.get(tenant, 0),
+                    deadline_s=self.tenant_deadlines.get(tenant, 0.0))
+                for tenant, agg in sorted(self._folded_aggs().items())
+            }
         out: Dict[str, Dict[str, float]] = {}
         for tenant in sorted({r.tenant for r in self.workflows.values()}):
             recs = self.tenant_records(tenant)

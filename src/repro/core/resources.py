@@ -164,6 +164,16 @@ class AdmissionArbiter(ResourceGatherer):
         # legacy order/may_backfill objects run the generic loop
         self._fast = callable(getattr(self.order_plugin, "walk", None))
 
+    def counters(self) -> Dict[str, int]:
+        """Compact counter export (shard result records): everything
+        the benchmarks read off the arbiter, no object graph."""
+        return {"admitted": self.admitted,
+                "grant_batches": self.grant_batches,
+                "deferrals": self.deferrals,
+                "quota_rejects": self.quota_rejects,
+                "preemptions": self.preemptions,
+                "max_pending": self.max_pending}
+
     # -- tenant registry ----------------------------------------------------
     def set_tenant(self, name: str, priority: int = 0, weight: float = 1.0,
                    quota_cpu_m: int = 0, quota_mem_mi: int = 0):

@@ -79,7 +79,9 @@ class ControlPlane:
                  usage_mode: str = "sampled",
                  retain_pod_log: bool = True,
                  lifecycle: Optional[str] = None,
-                 queue: Optional[str] = None):
+                 queue: Optional[str] = None,
+                 fold_completed: bool = False,
+                 capture_trace: bool = True):
         if engine_name not in ENGINES:
             raise ValueError(f"unknown engine {engine_name!r}; "
                              f"expected one of {sorted(ENGINES)}")
@@ -100,7 +102,8 @@ class ControlPlane:
         self.volumes = VolumeManager(self.sim, self.cluster, params)
         self.metrics = MetricsCollector(self.sim, self.cluster, params,
                                         sample_mode=sample_mode,
-                                        usage_mode=usage_mode)
+                                        usage_mode=usage_mode,
+                                        fold_completed=fold_completed)
         self.arbiter: Optional[AdmissionArbiter] = None
 
         if engine_name == "kubeadaptor":
@@ -124,7 +127,8 @@ class ControlPlane:
             self.engine = ENGINES[engine_name](
                 self.sim, self.cluster, self.volumes, self.metrics, params)
 
-        self.gateway = WorkflowGateway(self.sim, self.engine.submit, seed=seed)
+        self.gateway = WorkflowGateway(self.sim, self.engine.submit, seed=seed,
+                                       capture_trace=capture_trace)
         self.engine.on_workflow_done = self.gateway.workflow_done
 
     # -- tenancy knobs -------------------------------------------------------

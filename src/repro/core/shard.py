@@ -1,0 +1,428 @@
+"""Sharded multi-process control plane (ISSUE 6).
+
+One event loop tops out around 10^5 workflows: PR 5's 100k tier runs a
+single ``Sim`` at ~8k events/s and ~1.8 GiB RSS.  The 1M-workflow
+target partitions the *control plane itself*: tenants are hashed onto
+N arbiter shards, each shard owns a disjoint slice of the cluster's
+nodes and runs a complete stack — ``Sim`` loop, informers, admission
+arbiter, gateway — in a forked worker process.  Shards share nothing
+at runtime; results return over the pool's result pipe as compact
+picklable records (``MetricsPartial`` + scalar counters), and the
+parent merges them into global summaries via the mergeable stats
+layer (``core/stats``, ``core/metrics``).
+
+Determinism:
+
+* ``shard_of(tenant, workers) = crc32(tenant) % workers`` — a stable,
+  documented hash (NOT Python's randomized ``hash``), so a tenant
+  lands on the same shard in every process and on every run.
+* ``shard_seed(root, i)`` spawns each shard's RNG seed from the root
+  seed by sha256 — shards are decorrelated but fully reproducible,
+  and no seed depends on wallclock, pid, or worker scheduling.
+* ``processes=False`` runs the same per-shard function sequentially
+  in-process; by construction it is bit-identical to the multi-process
+  mode (pinned by tests/test_shard_plane.py), which makes the fork
+  path testable without fork-sensitive asserts.
+
+Throughput accounting on a sharded run: shards execute in waves of
+``shard_procs`` OS processes (default ``os.cpu_count()``), so each
+event loop runs unoversubscribed.  The aggregate ``events_per_sec``
+is Σ shard events / max(shard loop wall) — the standard weak-scaling
+aggregate ("N unoversubscribed loops side by side"); per-shard rows
+and the true end-to-end ``wall_s`` are always reported alongside so
+the definition is transparent, and ``loop_cpu_s`` gives the
+CPU-second basis.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import zlib
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import calibration as cal
+from repro.core.metrics import MetricsPartial
+from repro.core.runner import ControlPlane
+from repro.core.stats import StreamingStat
+
+__all__ = ["shard_of", "shard_seed", "partition_nodes", "ShardSpec",
+           "ShardedControlPlane", "ShardedRunResult"]
+
+
+def shard_of(tenant: str, workers: int) -> int:
+    """Deterministic tenant -> shard index (stable across processes)."""
+    if workers <= 1:
+        return 0
+    return zlib.crc32(tenant.encode("utf-8")) % workers
+
+
+def shard_seed(root_seed: int, index: int) -> int:
+    """Spawn shard ``index``'s seed from the root seed (sha256-based:
+    decorrelated streams, no wallclock/pid dependence)."""
+    digest = hashlib.sha256(
+        f"repro-shard/{root_seed}/{index}".encode("ascii")).digest()
+    return int.from_bytes(digest[:8], "big")
+
+
+def partition_nodes(n_nodes: int, workers: int) -> List[int]:
+    """Disjoint node-slice sizes per shard (first shards absorb the
+    remainder; sums to ``n_nodes``)."""
+    base, rem = divmod(n_nodes, workers)
+    return [base + (1 if i < rem else 0) for i in range(workers)]
+
+
+@dataclass
+class ShardSpec:
+    """Everything one worker process needs to build and run its shard
+    (picklable: crosses the pool task pipe)."""
+    index: int
+    workers: int
+    seed: int
+    n_nodes: int
+    engine_name: str = "kubeadaptor"
+    params: cal.ClusterParams = None
+    cluster_cfg: cal.PaperCluster = None      # template; n_nodes overrides
+    payload_mode: str = "virtual"
+    speculative: bool = False
+    scheduler: str = "topological"
+    admission_policy: str = "fifo"
+    sample_resources: bool = True
+    sample_mode: str = "full"
+    usage_mode: str = "sampled"
+    retain_pod_log: bool = True
+    lifecycle: Optional[str] = None
+    queue: Optional[str] = None
+    fold_completed: bool = False
+    capture_trace: bool = True
+    streams: List[dict] = field(default_factory=list)
+    trace_records: List[dict] = field(default_factory=list)
+    trace_tenants: Dict[str, dict] = field(default_factory=dict)
+    horizon_s: float = 500_000.0
+    record_bindings: bool = False
+    profile: bool = False
+
+
+def _build_shard_plane(spec: ShardSpec) -> ControlPlane:
+    params = spec.params if spec.params is not None else cal.DEFAULT_PARAMS
+    cfg = spec.cluster_cfg if spec.cluster_cfg is not None \
+        else cal.DEFAULT_CLUSTER
+    plane = ControlPlane(
+        spec.engine_name, params=params,
+        cluster_cfg=replace(cfg, n_nodes=spec.n_nodes),
+        payload_mode=spec.payload_mode, seed=spec.seed,
+        speculative=spec.speculative, scheduler=spec.scheduler,
+        admission_policy=spec.admission_policy,
+        sample_resources=spec.sample_resources,
+        sample_mode=spec.sample_mode, usage_mode=spec.usage_mode,
+        retain_pod_log=spec.retain_pod_log, lifecycle=spec.lifecycle,
+        queue=spec.queue, fold_completed=spec.fold_completed,
+        capture_trace=spec.capture_trace)
+    for stream in spec.streams:
+        plane.add_stream(**stream)
+    if spec.trace_records:
+        plane.add_trace(spec.trace_records, tenants=spec.trace_tenants)
+    return plane
+
+
+def _run_shard(spec: ShardSpec) -> dict:
+    """Build, run, and compact one shard.  Runs in a forked worker
+    (``processes=True``) or inline (``processes=False``) — identical
+    code path either way, so the two modes are bit-identical by
+    construction for everything the sim computes."""
+    import resource as _resource
+    import time as _time
+
+    import repro.core.cluster as _cluster_mod
+
+    plane = _build_shard_plane(spec)
+
+    bindings: List[Tuple[str, str]] = []
+    if spec.record_bindings:
+        inner = plane.cluster._bind
+
+        def recording_bind(pod, node):
+            bindings.append((pod.tenant,
+                             f"{pod.namespace}/{pod.name}->{node.name}"
+                             f"@{plane.sim.now():.4f}"))
+            return inner(pod, node)
+
+        plane.cluster._bind = recording_bind
+
+    copies0 = _cluster_mod.SNAPSHOTS_MADE
+    profiler = None
+    if spec.profile:
+        import cProfile
+        profiler = cProfile.Profile()
+        profiler.enable()
+    t0 = _time.perf_counter()
+    res = plane.run(horizon_s=spec.horizon_s)
+    wall = _time.perf_counter() - t0
+    profile_text = None
+    if profiler is not None:
+        import io
+        import pstats
+        profiler.disable()
+        buf = io.StringIO()
+        pstats.Stats(profiler, stream=buf).sort_stats(
+            "cumulative").print_stats(20)
+        profile_text = buf.getvalue()
+
+    partial = res.metrics.export_partial()
+    record = {
+        "shard": spec.index,
+        "seed": spec.seed,
+        "nodes": spec.n_nodes,
+        "tenants": sorted(partial.tenant_aggs),
+        "wall_s": wall,
+        "loop_wall_s": res.sim.run_wall_s,
+        "loop_cpu_s": getattr(res.sim, "run_cpu_s", 0.0),
+        "last_event_t": res.sim.last_event_t,
+        "events": res.sim.events_processed,
+        "pods_created": getattr(res.cluster, "pods_created", 0),
+        "api_calls": res.cluster.api_calls,
+        "informer_copies": _cluster_mod.SNAPSHOTS_MADE - copies0,
+        "peak_pending_pods": getattr(res.cluster, "max_pending_pods", 0),
+        "queue": res.sim.queue_name,
+        "usage_mode": res.metrics.usage_mode,
+        "lifecycle": getattr(res.cluster, "lifecycle", "chained"),
+        "completed_workflows": partial.completed,
+        "failed_workflows": partial.failed,
+        "arbiter": (res.arbiter.counters()
+                    if res.arbiter is not None else {}),
+        # per-process high-water mark: with maxtasksperchild=1 each
+        # worker runs exactly one shard, so this is the shard's own RSS
+        "peak_rss_mib": _resource.getrusage(
+            _resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+        "metrics_partial": partial,
+        "exec_stat": getattr(res.cluster, "exec_stat", None),
+        "profile": profile_text,
+        "bindings": bindings if spec.record_bindings else None,
+    }
+    return record
+
+
+@dataclass
+class ShardedRunResult:
+    """Merged view over the shard records.
+
+    ``shards`` keeps every per-shard record (ordered by shard index);
+    scalar totals are sums across shards, pending peaks are maxima,
+    ``metrics`` is the merged ``MetricsPartial`` (global
+    ``tenant_summary()`` / ``usage_summary()``), ``exec_stat`` the
+    merged pod-execution stat.  ``loop_wall_s`` is the max shard loop
+    wall (the weak-scaling denominator — see module docstring);
+    ``wall_s`` is the parent's true end-to-end wall.
+    """
+    workers: int
+    shards: List[dict]
+    metrics: MetricsPartial
+    exec_stat: Optional[StreamingStat]
+    wall_s: float
+
+    @property
+    def events(self) -> int:
+        return sum(s["events"] for s in self.shards)
+
+    @property
+    def pods_created(self) -> int:
+        return sum(s["pods_created"] for s in self.shards)
+
+    @property
+    def api_calls(self) -> int:
+        return sum(s["api_calls"] for s in self.shards)
+
+    @property
+    def informer_copies(self) -> int:
+        return sum(s["informer_copies"] for s in self.shards)
+
+    @property
+    def completed_workflows(self) -> int:
+        return sum(s["completed_workflows"] for s in self.shards)
+
+    @property
+    def failed_workflows(self) -> int:
+        return sum(s["failed_workflows"] for s in self.shards)
+
+    @property
+    def loop_wall_s(self) -> float:
+        return max((s["loop_wall_s"] for s in self.shards), default=0.0)
+
+    @property
+    def loop_cpu_s(self) -> float:
+        return sum(s["loop_cpu_s"] for s in self.shards)
+
+    @property
+    def sim_makespan_s(self) -> float:
+        return max((s["last_event_t"] for s in self.shards), default=0.0)
+
+    @property
+    def events_per_sec(self) -> float:
+        lw = self.loop_wall_s
+        return self.events / lw if lw > 0 else 0.0
+
+    @property
+    def peak_pending_pods(self) -> int:
+        return max((s["peak_pending_pods"] for s in self.shards), default=0)
+
+    @property
+    def peak_pending_admission(self) -> int:
+        return max((s["arbiter"].get("max_pending", 0)
+                    for s in self.shards), default=0)
+
+    @property
+    def peak_shard_rss_mib(self) -> float:
+        return max((s["peak_rss_mib"] for s in self.shards), default=0.0)
+
+    def arbiter_totals(self) -> Dict[str, int]:
+        """Summed arbiter counters (max_pending is a per-shard peak and
+        is excluded here — read ``peak_pending_admission``)."""
+        out: Dict[str, int] = {}
+        for s in self.shards:
+            for key, val in s["arbiter"].items():
+                if key == "max_pending":
+                    continue
+                out[key] = out.get(key, 0) + val
+        return out
+
+    def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        return self.metrics.tenant_summary()
+
+    def usage_summary(self) -> Dict[str, Dict[str, float]]:
+        return self.metrics.usage_summary()
+
+    def bindings(self) -> Dict[str, List[str]]:
+        """Per-tenant binding sequences (``record_bindings=True`` runs
+        only) — shard-internal order preserved per tenant."""
+        out: Dict[str, List[str]] = {}
+        for s in self.shards:
+            if not s["bindings"]:
+                continue
+            for tenant, line in s["bindings"]:
+                out.setdefault(tenant, []).append(line)
+        return out
+
+
+class ShardedControlPlane:
+    """Tenant-partitioned fan-out of ``ControlPlane``.
+
+    Mirrors the ``ControlPlane`` builder API (``add_stream`` /
+    ``add_trace`` / ``run``), but each tenant's streams land on shard
+    ``shard_of(tenant, workers)``; each shard gets a disjoint node
+    slice (``partition_nodes``), its own spawned seed, and a full
+    independent stack in a forked worker (``processes=True``) or run
+    inline sequentially (``processes=False`` — bit-identical, for
+    tests).  ``workers=1`` callers should use ``ControlPlane``
+    directly; this class still accepts it (single shard, full
+    cluster) for uniform benchmark plumbing.
+    """
+
+    def __init__(self, workers: int,
+                 engine_name: str = "kubeadaptor",
+                 params: cal.ClusterParams = cal.DEFAULT_PARAMS,
+                 cluster_cfg: cal.PaperCluster = cal.DEFAULT_CLUSTER,
+                 payload_mode: str = "virtual", seed: int = 0,
+                 speculative: bool = False,
+                 scheduler: str = "topological",
+                 admission_policy: str = "fifo",
+                 sample_resources: bool = True,
+                 sample_mode: str = "full",
+                 usage_mode: str = "sampled",
+                 retain_pod_log: bool = True,
+                 lifecycle: Optional[str] = None,
+                 queue: Optional[str] = None,
+                 fold_completed: bool = False,
+                 capture_trace: bool = True,
+                 processes: bool = True,
+                 shard_procs: Optional[int] = None,
+                 record_bindings: bool = False,
+                 profile: bool = False):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        if cluster_cfg.n_nodes < workers:
+            raise ValueError(f"{cluster_cfg.n_nodes} nodes cannot be "
+                             f"sliced across {workers} shards")
+        self.workers = workers
+        self.processes = processes
+        self.shard_procs = shard_procs
+        slices = partition_nodes(cluster_cfg.n_nodes, workers)
+        self.specs = [ShardSpec(
+            index=i, workers=workers, seed=shard_seed(seed, i),
+            n_nodes=slices[i], engine_name=engine_name, params=params,
+            cluster_cfg=cluster_cfg, payload_mode=payload_mode,
+            speculative=speculative, scheduler=scheduler,
+            admission_policy=admission_policy,
+            sample_resources=sample_resources, sample_mode=sample_mode,
+            usage_mode=usage_mode, retain_pod_log=retain_pod_log,
+            lifecycle=lifecycle, queue=queue,
+            fold_completed=fold_completed, capture_trace=capture_trace,
+            record_bindings=record_bindings, profile=profile)
+            for i in range(workers)]
+
+    # -- tenancy knobs (ControlPlane API, routed by tenant hash) ----------
+    def add_stream(self, workflow, repeats: int = 1,
+                   tenant: str = "default", arrival: str = "serial",
+                   concurrency: int = 1, rate: float = 1.0, burst: int = 1,
+                   priority: int = 0, weight: float = 1.0,
+                   quota_cpu_m: int = 0, quota_mem_mi: int = 0,
+                   deadline_s: float = 0.0) -> int:
+        """Register one tenant workload; returns the owning shard."""
+        shard = shard_of(tenant, self.workers)
+        self.specs[shard].streams.append(dict(
+            workflow=workflow, repeats=repeats, tenant=tenant,
+            arrival=arrival, concurrency=concurrency, rate=rate,
+            burst=burst, priority=priority, weight=weight,
+            quota_cpu_m=quota_cpu_m, quota_mem_mi=quota_mem_mi,
+            deadline_s=deadline_s))
+        return shard
+
+    def add_trace(self, records, tenants: Optional[dict] = None):
+        """Partition an arrival trace by tenant hash (record order is
+        preserved within each shard)."""
+        tenants = tenants or {}
+        for rec in records:
+            shard = shard_of(rec["tenant"], self.workers)
+            self.specs[shard].trace_records.append(rec)
+        for name, share in tenants.items():
+            self.specs[shard_of(name, self.workers)].trace_tenants[name] = \
+                share
+        return self
+
+    # -- execution --------------------------------------------------------
+    def run(self, horizon_s: float = 500_000.0) -> ShardedRunResult:
+        import time as _time
+        for spec in self.specs:
+            spec.horizon_s = horizon_s
+        t0 = _time.perf_counter()
+        if self.processes and self.workers > 1:
+            records = self._run_forked()
+        else:
+            records = [_run_shard(spec) for spec in self.specs]
+        wall = _time.perf_counter() - t0
+        records.sort(key=lambda r: r["shard"])
+
+        merged = MetricsPartial()
+        exec_stat: Optional[StreamingStat] = None
+        for rec in records:
+            merged.merge(rec["metrics_partial"])
+            st = rec["exec_stat"]
+            if st is not None:
+                if exec_stat is None:
+                    exec_stat = StreamingStat()
+                exec_stat.merge(st)
+        return ShardedRunResult(workers=self.workers, shards=records,
+                                metrics=merged, exec_stat=exec_stat,
+                                wall_s=wall)
+
+    def _run_forked(self) -> List[dict]:
+        import multiprocessing as mp
+        ctx = mp.get_context("fork")
+        wave = self.shard_procs or os.cpu_count() or 1
+        # maxtasksperchild=1: a fresh process per shard, so each
+        # worker's RUSAGE_SELF high-water mark is that shard's own RSS
+        # (the per-shard self-report the RSS gate trusts) and no state
+        # bleeds between shards.  The pool keeps at most ``wave``
+        # loops running at once so none is oversubscribed.
+        with ctx.Pool(processes=min(wave, self.workers),
+                      maxtasksperchild=1) as pool:
+            return pool.map(_run_shard, self.specs, chunksize=1)

@@ -210,6 +210,7 @@ class Sim:
         self.t = 0.0
         self.last_event_t = 0.0          # time of last processed event
         self.run_wall_s = 0.0            # real seconds inside run() loops
+        self.run_cpu_s = 0.0             # process CPU seconds inside run()
         if queue is None:
             queue = os.environ.get("REPRO_SIM_QUEUE", "calendar")
         if queue not in QUEUE_BACKENDS:
@@ -245,6 +246,7 @@ class Sim:
         drained first; ``last_event_t`` keeps the drain time."""
         n = 0
         wall0 = time.perf_counter()
+        cpu0 = time.process_time()
         pop = self._q.pop_due
         while self._live > 0:
             item = pop(until)
@@ -269,6 +271,7 @@ class Sim:
         # figures exclude setup before the loop and any epilogue after
         # it (benchmarks divide events by this, see bench_scale)
         self.run_wall_s += time.perf_counter() - wall0
+        self.run_cpu_s += time.process_time() - cpu0
         if until is not None and until > self.t:
             self.t = until
 

@@ -20,6 +20,18 @@ times.  Mean, peak, and time-weighted percentiles then come out in
 closed form — exact where the sampler was approximate, and at zero
 sim-event cost.  Distinct levels are bounded by the workload's request
 quantisation (a few hundred values), so memory stays flat.
+
+Sharded control plane (ISSUE 6): both accumulators are *mergeable*.
+``StreamingStat.merge`` composes count/mean/variance exactly (Chan's
+parallel update), min/max exactly, and unions the percentile
+reservoirs (weighted subsample when the union overflows the
+capacity — deterministic, driven by the stat's own private RNG).
+``StepAccumulator.merge`` composes two recorded windows as if the
+second followed the first: per-level residence times add, the peak is
+the max of peaks, so a step stream split at any boundary and merged
+equals the unsplit accumulation exactly.  Both types pickle cleanly,
+so per-shard partials travel over the result pipe and the parent
+reconstructs global summaries (see core/shard.py).
 """
 from __future__ import annotations
 
@@ -58,6 +70,67 @@ class StreamingStat:
             j = self._rng.randrange(self.count)
             if j < self._capacity:
                 self._reservoir[j] = x
+
+    def merge(self, other: "StreamingStat") -> "StreamingStat":
+        """Fold ``other`` into self (Chan's parallel variance update).
+
+        count / min / max compose exactly; mean and variance compose
+        exactly up to float associativity.  Reservoirs are unioned;
+        when the union exceeds capacity a weighted subsample is drawn
+        with self's private RNG (each parent's entries are kept with
+        probability proportional to the stream size they represent),
+        so percentile quality is preserved and the result is
+        deterministic for a deterministic merge order.
+        """
+        if other.count == 0:
+            return self
+        if self.count == 0:
+            self.count = other.count
+            self.mean = other.mean
+            self._m2 = other._m2
+            self.max = other.max
+            self.min = other.min
+            self._reservoir = list(other._reservoir)
+            return self
+        n_a, n_b = self.count, other.count
+        n = n_a + n_b
+        delta = other.mean - self.mean
+        self.mean += delta * (n_b / n)
+        self._m2 += other._m2 + delta * delta * (n_a * n_b / n)
+        self.count = n
+        if other.max > self.max:
+            self.max = other.max
+        if other.min < self.min:
+            self.min = other.min
+        union = self._reservoir + list(other._reservoir)
+        if len(union) > self._capacity:
+            # Weighted subsample: items from the larger stream should
+            # survive proportionally more often.  Each reservoir item
+            # stands for count/len(reservoir) observations.
+            w_a = n_a / max(1, len(self._reservoir))
+            w_b = n_b / max(1, len(other._reservoir))
+            weights = ([w_a] * len(self._reservoir)
+                       + [w_b] * len(other._reservoir))
+            picked = []
+            total_w = sum(weights)
+            rng = self._rng
+            for _ in range(self._capacity):
+                r = rng.random() * total_w
+                acc = 0.0
+                for i, w in enumerate(weights):
+                    acc += w
+                    if r <= acc:
+                        picked.append(union[i])
+                        total_w -= w
+                        del union[i], weights[i]
+                        break
+                else:  # float slack: take the last remaining item
+                    picked.append(union.pop())
+                    total_w -= weights.pop()
+            self._reservoir = picked
+        else:
+            self._reservoir = union
+        return self
 
     @property
     def variance(self) -> float:
@@ -114,6 +187,26 @@ class StepAccumulator:
     def close(self, t: float):
         """Integrate the open interval up to ``t`` (idempotent)."""
         self.set(t, self.level)
+
+    def merge(self, other: "StepAccumulator") -> "StepAccumulator":
+        """Compose two recorded windows (self, then other).
+
+        Per-level residence times add, ``peak`` is the max of peaks,
+        ``changes`` add, and the recorded span extends by the other's
+        span — so an accumulation split at any closed boundary and
+        merged equals the unsplit accumulation exactly.  Both sides
+        should be ``close``d first; the merged ``level`` is the
+        other's final level (the later window).
+        """
+        ld = self.level_dur
+        for lv, d in other.level_dur.items():
+            ld[lv] = ld.get(lv, 0.0) + d
+        if other.peak > self.peak:
+            self.peak = other.peak
+        self.changes += other.changes
+        self.last_t += other.total_time
+        self.level = other.level
+        return self
 
     @property
     def total_time(self) -> float:

@@ -1,0 +1,299 @@
+"""Sharded control plane (ISSUE 6): mergeable stats + shard equivalence.
+
+Three layers of guarantees:
+
+* property tests: merging per-chunk ``StreamingStat`` /
+  ``StepAccumulator`` over ANY partition of a stream reproduces the
+  whole-stream accumulation (counts/min/max/peak exact, means and
+  variances to float tolerance, step residence times per level exact
+  up to summation order) — driven by hypothesis when installed,
+  otherwise by a seeded random-case generator exercising the same
+  invariant (the property and checks are identical in both drivers);
+* partition determinism: ``shard_of`` is a pinned stable hash,
+  ``shard_seed`` spawns distinct wallclock-free seeds, node slices
+  are disjoint and exhaustive;
+* mode equivalence: ``processes=False`` (in-process, sequential) and
+  ``processes=True`` (forked workers) produce identical per-tenant
+  binding sequences, tenant summaries, and event counts — pinned by
+  hash so a regression in either mode (or in the merge layer) fails
+  loudly.
+"""
+import hashlib
+import math
+import random
+
+from repro.configs.workflows import get_workflow_spec
+from repro.core.dag import make_workflow
+from repro.core.metrics import MetricsPartial, TenantAgg
+from repro.core.shard import (ShardedControlPlane, partition_nodes, shard_of,
+                              shard_seed)
+from repro.core.stats import StepAccumulator, StreamingStat
+
+try:                                     # property-based when available,
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # seeded sweep otherwise
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------------
+# property tests: merge of splits == whole, any partition
+# --------------------------------------------------------------------------
+def _check_stream_partition(xs, chunks):
+    whole = StreamingStat()
+    for x in xs:
+        whole.add(x)
+    parts = []
+    for chunk in chunks:
+        stat = StreamingStat()
+        for x in chunk:
+            stat.add(x)
+        parts.append(stat)
+    merged = parts[0]
+    for stat in parts[1:]:
+        merged.merge(stat)
+    assert merged.count == whole.count == len(xs)
+    assert merged.min == whole.min
+    assert merged.max == whole.max
+    assert math.isclose(merged.mean, whole.mean,
+                        rel_tol=1e-9, abs_tol=1e-6)
+    assert math.isclose(merged.variance, whole.variance,
+                        rel_tol=1e-6, abs_tol=1e-3)
+    # the merged reservoir stays a sample of the stream
+    assert len(merged._reservoir) == min(len(xs), 512)
+    assert set(merged._reservoir) <= set(xs)
+
+
+def _check_step_split(dts, levels, cut):
+    whole = StepAccumulator(t0=0.0)
+    t = 0.0
+    for dt, lv in zip(dts, levels):
+        t += dt
+        whole.set(t, lv)
+    whole.close(t)
+
+    a = StepAccumulator(t0=0.0)
+    t = 0.0
+    for dt, lv in zip(dts[:cut], levels[:cut]):
+        t += dt
+        a.set(t, lv)
+    a.close(t)
+    b = StepAccumulator(t0=t, level=a.level)
+    for dt, lv in zip(dts[cut:], levels[cut:]):
+        t += dt
+        b.set(t, lv)
+    b.close(t)
+
+    a.merge(b)
+    assert a.peak == whole.peak
+    assert a.changes == whole.changes
+    assert math.isclose(a.total_time, whole.total_time,
+                        rel_tol=1e-9, abs_tol=1e-9)
+    assert set(a.level_dur) == set(whole.level_dur)
+    for lv, dur in whole.level_dur.items():
+        assert math.isclose(a.level_dur[lv], dur,
+                            rel_tol=1e-9, abs_tol=1e-9)
+    assert math.isclose(a.mean(), whole.mean(),
+                        rel_tol=1e-9, abs_tol=1e-9)
+    if whole.total_time > 0:
+        assert a.percentile(95) == whole.percentile(95)
+
+
+def _random_stream_case(rng):
+    xs = [rng.uniform(-1e9, 1e9) for _ in range(rng.randint(1, 120))]
+    cuts = sorted(rng.randint(0, len(xs))
+                  for _ in range(rng.randint(0, len(xs) - 1)))
+    bounds = [0] + cuts + [len(xs)]
+    return xs, [xs[a:b] for a, b in zip(bounds, bounds[1:])]
+
+
+def _random_step_case(rng):
+    n = rng.randint(1, 60)
+    dts = [rng.uniform(0.0, 100.0) for _ in range(n)]
+    levels = [rng.randint(0, 50) for _ in range(n)]
+    return dts, levels, rng.randint(0, n)
+
+
+if HAVE_HYPOTHESIS:
+    finite_floats = st.floats(min_value=-1e9, max_value=1e9,
+                              allow_nan=False, allow_infinity=False)
+
+    @st.composite
+    def partitioned_stream(draw):
+        xs = draw(st.lists(finite_floats, min_size=1, max_size=120))
+        n_chunks = draw(st.integers(min_value=1, max_value=len(xs)))
+        cuts = sorted(draw(st.lists(
+            st.integers(min_value=0, max_value=len(xs)),
+            min_size=n_chunks - 1, max_size=n_chunks - 1)))
+        bounds = [0] + cuts + [len(xs)]
+        return xs, [xs[a:b] for a, b in zip(bounds, bounds[1:])]
+
+    @st.composite
+    def step_schedule(draw):
+        dts = draw(st.lists(st.floats(min_value=0.0, max_value=100.0,
+                                      allow_nan=False),
+                            min_size=1, max_size=60))
+        levels = draw(st.lists(st.integers(min_value=0, max_value=50),
+                               min_size=len(dts), max_size=len(dts)))
+        cut = draw(st.integers(min_value=0, max_value=len(dts)))
+        return dts, levels, cut
+
+    @given(partitioned_stream())
+    @settings(max_examples=200, deadline=None)
+    def test_streaming_stat_merge_any_partition(case):
+        _check_stream_partition(*case)
+
+    @given(step_schedule())
+    @settings(max_examples=200, deadline=None)
+    def test_step_accumulator_merge_split_equals_whole(case):
+        _check_step_split(*case)
+else:
+    def test_streaming_stat_merge_any_partition():
+        rng = random.Random(0xA11CE)
+        for _ in range(300):
+            _check_stream_partition(*_random_stream_case(rng))
+
+    def test_step_accumulator_merge_split_equals_whole():
+        rng = random.Random(0xB0B)
+        for _ in range(300):
+            _check_step_split(*_random_step_case(rng))
+
+
+def test_tenant_agg_merge_matches_single_fold():
+    # two halves of a record stream folded separately then merged
+    # == one agg folding everything
+    from repro.core.metrics import WorkflowRecord
+    recs = []
+    for i in range(10):
+        r = WorkflowRecord("wf", i, tenant="t", submitted_at=float(i),
+                           first_create=i + 1.0, ns_created=i + 0.5,
+                           ns_deleted=i + 10.0)
+        if i % 4 == 3:
+            r.failed = True
+        recs.append(r)
+    whole, left, right = TenantAgg(), TenantAgg(), TenantAgg()
+    for r in recs:
+        whole.fold(r, deadline_s=12.0)
+    for r in recs[:5]:
+        left.fold(r, deadline_s=12.0)
+    for r in recs[5:]:
+        right.fold(r, deadline_s=12.0)
+    left.merge(right)
+    assert left == whole
+    assert left.summary_row(deadline_s=12.0) == \
+        whole.summary_row(deadline_s=12.0)
+
+
+# --------------------------------------------------------------------------
+# partition determinism
+# --------------------------------------------------------------------------
+def test_shard_of_is_pinned_stable_hash():
+    # crc32-based: stable across processes and Python versions (NOT
+    # Python's randomized hash). Pinned values document the contract.
+    assert shard_of("montage-prod0", 8) == 2
+    assert shard_of("montage-prod0", 1) == 0
+    assert all(0 <= shard_of(f"tenant-{i}", 5) < 5 for i in range(100))
+    # the bench naming scheme spreads each {topo}-{klass} family of W
+    # tenants across all W shards exactly evenly (crc32 is affine)
+    for topo in ("montage", "epigenomics", "cybershake", "ligo"):
+        for klass in ("prod", "batch"):
+            shards = {shard_of(f"{topo}-{klass}{j}", 8) for j in range(8)}
+            assert shards == set(range(8))
+
+
+def test_shard_seed_spawning():
+    seeds = [shard_seed(42, i) for i in range(16)]
+    assert len(set(seeds)) == 16           # decorrelated
+    assert seeds == [shard_seed(42, i) for i in range(16)]  # reproducible
+    assert shard_seed(43, 0) != shard_seed(42, 0)
+
+
+def test_partition_nodes_disjoint_exhaustive():
+    for n, w in ((8000, 8), (10, 3), (5, 5), (7, 2)):
+        slices = partition_nodes(n, w)
+        assert sum(slices) == n
+        assert len(slices) == w
+        assert max(slices) - min(slices) <= 1
+
+
+# --------------------------------------------------------------------------
+# in-process vs multi-process equivalence (pinned)
+# --------------------------------------------------------------------------
+def _mini_sharded(processes, workers=2):
+    wf = make_workflow("montage", get_workflow_spec("montage"))
+    ep = make_workflow("epigenomics", get_workflow_spec("epigenomics"))
+    plane = ShardedControlPlane(
+        workers, admission_policy="fair-share", seed=42,
+        sample_mode="streaming", usage_mode="event", retain_pod_log=False,
+        processes=processes, record_bindings=True)
+    for j in range(workers):
+        plane.add_stream(wf, repeats=6, tenant=f"montage-prod{j}",
+                         arrival="concurrent", concurrency=2, priority=10,
+                         weight=3.0, deadline_s=180.0)
+        plane.add_stream(ep, repeats=6, tenant=f"epigenomics-batch{j}",
+                         arrival="poisson", rate=0.5, burst=2,
+                         deadline_s=3600.0)
+    return plane
+
+
+def _binding_digest(bindings):
+    h = hashlib.sha256()
+    for tenant in sorted(bindings):
+        h.update(tenant.encode())
+        for line in bindings[tenant]:
+            h.update(line.encode())
+    return h.hexdigest()
+
+
+def test_inprocess_equals_multiprocess_pinned():
+    r_in = _mini_sharded(processes=False).run()
+    r_mp = _mini_sharded(processes=True).run()
+    # identical per-tenant binding sequences, bit for bit
+    assert r_in.bindings() == r_mp.bindings()
+    assert r_in.events == r_mp.events
+    assert [s["events"] for s in r_in.shards] == \
+        [s["events"] for s in r_mp.shards]
+    assert r_in.tenant_summary() == r_mp.tenant_summary()
+    assert r_in.usage_summary() == r_mp.usage_summary()
+    assert r_in.completed_workflows == r_mp.completed_workflows == 24
+    # pinned digest: moving ANY binding in EITHER mode fails here
+    digest = _binding_digest(r_in.bindings())
+    assert _binding_digest(r_mp.bindings()) == digest
+    assert digest == PINNED_SHARD_BINDINGS
+
+
+PINNED_SHARD_BINDINGS = \
+    "93f5b4f868f093d4b454f72593407b0859aa39f2a0e26c84ffdca98a9f60aa3f"
+
+
+def test_tenant_partition_is_disjoint_and_merged_summary_is_union():
+    plane = _mini_sharded(processes=False)
+    res = plane.run()
+    tenant_sets = [set(s["tenants"]) for s in res.shards]
+    for i, a in enumerate(tenant_sets):
+        for b in tenant_sets[i + 1:]:
+            assert not (a & b)
+    # merged summary == union of per-shard partial summaries (tenants
+    # are disjoint, so this is exact — float-for-float)
+    union = {}
+    for s in res.shards:
+        union.update(s["metrics_partial"].tenant_summary())
+    assert res.tenant_summary() == union
+    # every stream's workflows completed somewhere
+    assert res.completed_workflows == 24
+    assert res.failed_workflows == 0
+
+
+def test_metrics_partial_merge_is_order_independent_on_counts():
+    plane = _mini_sharded(processes=False)
+    res = plane.run()
+    parts = [s["metrics_partial"] for s in res.shards]
+    ab = MetricsPartial()
+    ab.merge(parts[0])
+    ab.merge(parts[1])
+    ba = MetricsPartial()
+    ba.merge(parts[1])
+    ba.merge(parts[0])
+    assert ab.tenant_summary() == ba.tenant_summary()
+    assert ab.completed == ba.completed == res.completed_workflows
