@@ -25,7 +25,11 @@ Usage:
         [--lifecycle fast|chained] [--trace examples/trace_mixed.json] \
         [--out BENCH_scale.json] [--budget-s 0] [--profile] \
         [--min-events-per-sec 0] [--max-events-per-pod 0] \
-        [--max-peak-rss-mib 0] [--max-shard-rss-mib 0] [--shard-procs 0]
+        [--max-peak-rss-mib 0] [--max-shard-rss-mib 0] [--shard-procs 0] \
+        [--chaos-node-kill-interval 0] [--chaos-drain-interval 0] \
+        [--chaos-node-downtime 0] [--chaos-api-fault-rate 0] \
+        [--chaos-task-crash-rate 0] [--chaos-start-after 0] \
+        [--chaos-seed 0] [--require-complete] [--append]
 
 ``--budget-s`` exits 2 when total wall time exceeds the budget;
 ``--min-events-per-sec`` / ``--max-events-per-pod`` /
@@ -75,6 +79,25 @@ eviction).  Every stream carries an SLO deadline (prod 180 s / batch
 3600 s — metrics only); runs report per-tenant deadline hit-rates plus
 preemption and quota-reject counts.
 
+Chaos tier (ISSUE 7): the ``--chaos-*`` flags arm a seeded
+``ChaosSchedule`` (repro.core.chaos) on every policy run — node
+kills/drains on exponential timers with seeded downtime, transient
+apiserver faults absorbed by the engine's capped
+exponential-backoff-with-jitter retry, and mid-run task crashes that
+ride the ordinary retry budget.  Chaos draws come from their own
+sha256-spawned stream, so runs without the flags are bit-identical to
+``bench_scale/v4`` behavior and a fixed ``--chaos-seed`` replays
+exactly (sharded runs spawn per-shard sub-streams).  Chaos rows add
+``"chaos"`` (injection counters: node kills/drains/restores, pods
+lost, api faults, task crashes, cumulative node downtime) and
+``"recovery"`` (node_lost vs preempted eviction split,
+time-to-reschedule percentiles).  ``--require-complete`` exits 2
+unless every run completes all workflows with zero failures — the
+``chaos-smoke`` CI job uses it to assert full recovery under faults
+across all six policies.  ``--append`` merges the new tiers into an
+existing ``--out`` report instead of overwriting it, so the chaos
+tier can ride alongside previously recorded tiers.
+
 The script still runs against the pre-optimization core (counters it
 introduced are read via getattr) so speedups can be measured by
 checking out two revisions and comparing ``wall_s``.
@@ -108,7 +131,7 @@ BATCH_DEADLINE_S = 3600.0
 # (sum over the 8 streams = 120%, so caps genuinely bind under load)
 PROD_QUOTA_FRAC = 0.20
 BATCH_QUOTA_FRAC = 0.10
-SCHEMA = "bench_scale/v4"
+SCHEMA = "bench_scale/v5"
 
 
 def _plane_kwargs(usage_mode, queue, lifecycle):
@@ -130,7 +153,8 @@ def _plane_kwargs(usage_mode, queue, lifecycle):
 
 def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
                 queue=None, lifecycle=None, trace=None, workers=1,
-                shard_procs=None, processes=True, profile=False):
+                shard_procs=None, processes=True, profile=False,
+                chaos=None):
     if workers > 1:
         from repro.core.shard import ShardedControlPlane
         plane = ShardedControlPlane(
@@ -138,11 +162,11 @@ def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
             cluster_cfg=cal.PaperCluster(n_nodes=n_nodes), seed=seed,
             fold_completed=True, capture_trace=False,
             shard_procs=shard_procs, processes=processes, profile=profile,
-            **_plane_kwargs(usage_mode, queue, lifecycle))
+            chaos=chaos, **_plane_kwargs(usage_mode, queue, lifecycle))
     else:
         plane = ControlPlane("kubeadaptor", admission_policy=policy,
                              cluster_cfg=cal.PaperCluster(n_nodes=n_nodes),
-                             seed=seed,
+                             seed=seed, chaos=chaos,
                              **_plane_kwargs(usage_mode, queue, lifecycle))
     if trace is not None:
         plane.add_trace(trace.get("arrivals", []),
@@ -197,16 +221,16 @@ def _add_stream_accepts(name):
 
 def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
                usage_mode="event", queue=None, lifecycle=None, trace=None,
-               profile=False, workers=1, shard_procs=None):
+               profile=False, workers=1, shard_procs=None, chaos=None):
     if workers > 1:
         return _run_policy_sharded(
             policy, n_workflows, n_nodes, seed, horizon_s=horizon_s,
             usage_mode=usage_mode, queue=queue, lifecycle=lifecycle,
             trace=trace, profile=profile, workers=workers,
-            shard_procs=shard_procs)
+            shard_procs=shard_procs, chaos=chaos)
     plane = build_plane(policy, n_workflows, n_nodes, seed,
                         usage_mode=usage_mode, queue=queue,
-                        lifecycle=lifecycle, trace=trace)
+                        lifecycle=lifecycle, trace=trace, chaos=chaos)
     try:
         import repro.core.cluster as _cluster_mod
         copies0 = _cluster_mod.SNAPSHOTS_MADE
@@ -312,13 +336,21 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
                              "mean": round(exec_stat.mean, 2),
                              "max": round(exec_stat.max, 2),
                              "p95": round(exec_stat.percentile(95), 2)}
+    # chaos/recovery observables (ISSUE 7): only emitted when a chaos
+    # schedule was armed — chaos-free rows keep the exact v4 key set
+    chaos_inj = getattr(res, "chaos", None)
+    if chaos_inj is not None:
+        rec["chaos"] = chaos_inj.counters()
+        rec["recovery"] = {
+            k: (round(v, 4) if isinstance(v, float) else v)
+            for k, v in m.export_partial().recovery_summary().items()}
     return rec
 
 
 def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
                         horizon_s=400_000.0, usage_mode="event", queue=None,
                         lifecycle=None, trace=None, profile=False,
-                        workers=2, shard_procs=None):
+                        workers=2, shard_procs=None, chaos=None):
     """One policy run through the tenant-partitioned control plane
     (repro.core.shard): same row schema as the unsharded path plus
     ``workers`` / ``shards[]`` / fork-proof RSS totals."""
@@ -327,7 +359,8 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
     plane = build_plane(policy, n_workflows, n_nodes, seed,
                         usage_mode=usage_mode, queue=queue,
                         lifecycle=lifecycle, trace=trace, workers=workers,
-                        shard_procs=shard_procs, profile=profile)
+                        shard_procs=shard_procs, profile=profile,
+                        chaos=chaos)
     t0 = time.perf_counter()
     res = plane.run(horizon_s=horizon_s)
     wall = time.perf_counter() - t0
@@ -430,16 +463,28 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
                              "mean": round(res.exec_stat.mean, 2),
                              "max": round(res.exec_stat.max, 2),
                              "p95": round(res.exec_stat.percentile(95), 2)}
+    # chaos/recovery observables (ISSUE 7): per-shard counters summed
+    # by ShardedRunResult.chaos_counters; recovery merges exactly
+    # across shards (node_lost/preempted are sums, resched percentiles
+    # come from the merged StreamingStat)
+    if chaos is not None:
+        rec["chaos"] = res.chaos_counters()
+        rec["recovery"] = {
+            k: (round(v, 4) if isinstance(v, float) else v)
+            for k, v in res.recovery_summary().items()}
+        if res.degraded:
+            rec["degraded"] = True
+            rec["shard_failures"] = res.failures
     return rec
 
 
 def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
                  queue=None, lifecycle=None, trace=None, trace_path=None,
-                 profile=False, workers=1, shard_procs=None):
+                 profile=False, workers=1, shard_procs=None, chaos=None):
     runs = [run_policy(p, n_workflows, n_nodes, seed, usage_mode=usage_mode,
                        queue=queue, lifecycle=lifecycle, trace=trace,
                        profile=profile, workers=workers,
-                       shard_procs=shard_procs)
+                       shard_procs=shard_procs, chaos=chaos)
             for p in policies]
     scenario = {"workflows": n_workflows, "nodes": n_nodes,
                 "node_cpu_m": cal.PaperCluster.node_cpu_m,
@@ -448,6 +493,15 @@ def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
                 "streams": 2 * len(TOPOLOGIES) * max(1, workers)}
     if workers > 1:
         scenario["workers"] = workers
+    if chaos is not None:
+        scenario["chaos"] = {
+            "seed": chaos.seed,
+            "node_kill_interval_s": chaos.node_kill_interval_s,
+            "node_drain_interval_s": chaos.node_drain_interval_s,
+            "node_downtime_s": chaos.node_downtime_s,
+            "api_fault_rate": chaos.api_fault_rate,
+            "task_crash_rate": chaos.task_crash_rate,
+            "start_after_s": chaos.start_after_s}
     if trace is not None:
         arrivals = trace.get("arrivals", [])
         scenario.update({"trace": trace_path,
@@ -534,6 +588,33 @@ def main():
     ap.add_argument("--profile", action="store_true",
                     help="cProfile each policy run and print the top-20 "
                          "cumulative-time hotspots")
+    ap.add_argument("--chaos-node-kill-interval", type=float, default=0.0,
+                    help="mean seconds between node kills (exponential "
+                         "stream; 0 = off)")
+    ap.add_argument("--chaos-drain-interval", type=float, default=0.0,
+                    help="mean seconds between node drains (graceful "
+                         "spot-reclaim; 0 = off)")
+    ap.add_argument("--chaos-node-downtime", type=float, default=0.0,
+                    help="seconds until a killed/drained node rejoins "
+                         "(0 = permanent loss)")
+    ap.add_argument("--chaos-api-fault-rate", type=float, default=0.0,
+                    help="probability each create/delete call returns a "
+                         "retryable apiserver fault")
+    ap.add_argument("--chaos-task-crash-rate", type=float, default=0.0,
+                    help="probability a running task crashes mid-execution "
+                         "(charges the ordinary retry budget)")
+    ap.add_argument("--chaos-start-after", type=float, default=0.0,
+                    help="sim seconds of calm before the first node event")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="chaos stream seed (sha256-spawned; independent "
+                         "of --seed)")
+    ap.add_argument("--require-complete", action="store_true",
+                    help="fail (exit 2) unless every run completes all "
+                         "workflows with zero failures (the chaos-smoke "
+                         "recovery gate)")
+    ap.add_argument("--append", action="store_true",
+                    help="merge the new tiers into an existing --out "
+                         "report instead of overwriting it")
     args = ap.parse_args()
 
     policies = [p for p in args.policies.split(",") if p]
@@ -541,6 +622,18 @@ def main():
     if args.trace:
         with open(args.trace) as f:
             trace = json.load(f)
+    chaos = None
+    if (args.chaos_node_kill_interval or args.chaos_drain_interval
+            or args.chaos_api_fault_rate or args.chaos_task_crash_rate):
+        from repro.core.chaos import ChaosSchedule
+        chaos = ChaosSchedule(
+            seed=args.chaos_seed,
+            node_kill_interval_s=args.chaos_node_kill_interval,
+            node_drain_interval_s=args.chaos_drain_interval,
+            node_downtime_s=args.chaos_node_downtime,
+            api_fault_rate=args.chaos_api_fault_rate,
+            task_crash_rate=args.chaos_task_crash_rate,
+            start_after_s=args.chaos_start_after)
     tiers = []
     for n_wf, n_nodes, n_workers in _parse_tiers(args):
         tier = run_scenario(n_wf, n_nodes, args.seed, policies,
@@ -549,7 +642,8 @@ def main():
                             lifecycle=args.lifecycle or None,
                             trace=trace, trace_path=args.trace or None,
                             profile=args.profile, workers=n_workers,
-                            shard_procs=args.shard_procs or None)
+                            shard_procs=args.shard_procs or None,
+                            chaos=chaos)
         tiers.append(tier)
         n_wf = tier["scenario"]["workflows"]
         shard_tag = f"/{n_workers}w" if n_workers > 1 else ""
@@ -563,12 +657,20 @@ def main():
         if trace is not None:
             break                     # a trace defines its own workload
 
+    out_tiers = tiers
+    if args.append:
+        try:
+            with open(args.out) as f:
+                prior = json.load(f)
+            out_tiers = prior.get("tiers", []) + tiers
+        except FileNotFoundError:
+            pass
     report = {
         "schema": SCHEMA,
         "host": {"python": platform.python_version(),
                  "platform": platform.platform()},
-        "tiers": tiers,
-        "total_wall_s": round(sum(t["total_wall_s"] for t in tiers), 3),
+        "tiers": out_tiers,
+        "total_wall_s": round(sum(t["total_wall_s"] for t in out_tiers), 3),
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
@@ -576,13 +678,28 @@ def main():
     print(f"total wall: {report['total_wall_s']:.1f}s -> {args.out}")
 
     failures = []
-    if args.budget_s and report["total_wall_s"] > args.budget_s:
-        failures.append(f"BUDGET EXCEEDED: {report['total_wall_s']:.1f}s "
+    # gates apply to the tiers run NOW (under --append, prior tiers in
+    # the merged report are not re-gated)
+    new_wall = round(sum(t["total_wall_s"] for t in tiers), 3)
+    if args.budget_s and new_wall > args.budget_s:
+        failures.append(f"BUDGET EXCEEDED: {new_wall:.1f}s "
                         f"> {args.budget_s:.1f}s")
     for tier in tiers:
         for r in tier["runs"]:
             label = (f"{tier['scenario']['workflows']}wf/"
                      f"{tier['scenario']['nodes']}n {r['policy']}")
+            if args.require_complete:
+                want = tier["scenario"]["workflows"]
+                if (r["completed_workflows"] != want
+                        or r["failed_workflows"]):
+                    failures.append(
+                        f"INCOMPLETE RECOVERY: {label} completed "
+                        f"{r['completed_workflows']}/{want}, failed "
+                        f"{r['failed_workflows']}")
+                if r.get("degraded"):
+                    failures.append(
+                        f"DEGRADED RESULT: {label} dropped shards "
+                        f"{[s['shard'] for s in r['shard_failures']]}")
             if (args.min_events_per_sec and r["events_per_sec"]
                     and r["events_per_sec"] < args.min_events_per_sec):
                 failures.append(

@@ -57,6 +57,13 @@ class ClusterParams:
                                         # per starved tenant (bounds
                                         # eviction churn while a plan's
                                         # deletions are still in flight)
+    # transient apiserver faults (chaos plane, ISSUE 7): capped
+    # exponential backoff with jitter for retryable "Unavailable"
+    # errors on pod create/delete — generalizes the AlreadyExists
+    # delete+retry above
+    api_fault_backoff_s: float = 0.25   # base delay, doubled per attempt
+    api_fault_backoff_max_s: float = 8.0
+    max_api_fault_retries: int = 8      # then RuntimeError (outage, not blip)
     straggler_factor: float = 1.5      # speculative copy beyond x expected
     straggler_min_wait: float = 5.0
     # metrics

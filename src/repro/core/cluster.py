@@ -178,6 +178,7 @@ class PodObj(_FastCopy):
     deleted: float = -1.0
     restarts: int = 0
     evicted: bool = False              # preempted by the admission pipeline
+    node_lost: bool = False            # evicted because its node died
     _holding: bool = False             # currently holds node resources
 
 
@@ -285,6 +286,10 @@ class Cluster:
         self.max_pending_pods = 0            # peak unbound-pod queue depth
         self.sched_cycles = 0
         self.evictions = 0                   # pods preempted via evict_pod
+        self.pods_lost = 0                   # pods failed by node kill/drain
+        # fault injection (chaos plane, ISSUE 7): ChaosInjector attaches
+        # itself here; None = zero draws, bit-identical behavior
+        self.chaos = None
         # bound (resource-holding) cpu/mem per tenant label, kept current
         # at bind/release so samplers never scan the pod table
         self.tenant_holding_cpu: Dict[str, int] = {}
@@ -391,6 +396,14 @@ class Cluster:
     def create_pod(self, pod: PodObj, cb: Optional[Callable] = None,
                    error_cb: Optional[Callable] = None):
         self.api_calls += 1
+        # transient apiserver fault (chaos plane): the call is charged
+        # but fails after the round-trip with a retryable error; only
+        # callers that can absorb it (error_cb) are ever faulted
+        if (self.chaos is not None and error_cb is not None
+                and self.chaos.api_fault_draw()):
+            self.sim.after(self.p.api_latency, error_cb,
+                           note="api-fault", args=("Unavailable", pod))
+            return
         if not self._fast:
             self.sim.after(self.p.api_latency, self._create_now,
                            args=(pod, cb, error_cb))
@@ -440,8 +453,15 @@ class Cluster:
             cb(pod)
 
     def delete_pod(self, namespace: str, name: str,
-                   cb: Optional[Callable] = None):
+                   cb: Optional[Callable] = None,
+                   error_cb: Optional[Callable] = None):
         self.api_calls += 1
+        if (self.chaos is not None and error_cb is not None
+                and self.chaos.api_fault_draw()):
+            self.sim.after(self.p.api_latency, error_cb,
+                           note="api-fault",
+                           args=("Unavailable", (namespace, name)))
+            return
         if not self._fast:
             self.sim.after(self.p.api_latency, self._delete_lookup,
                            args=(namespace, name, cb))
@@ -659,6 +679,10 @@ class Cluster:
         due time, or -1.0 when the pod can no longer start."""
         if self.pods.get((pod.namespace, pod.name)) is not pod:
             return -1.0                              # deleted while starting
+        if pod.phase != PENDING:
+            return -1.0                              # failed before start
+            #                                          (node kill/drain while
+            #                                           the start was in flight)
         if not self.nodes[pod.node].ready:
             return -1.0                              # node died mid-start
         pod.phase = RUNNING
@@ -671,6 +695,14 @@ class Cluster:
         elif pod.payload is not None:
             pod.payload()                            # run, but virtual timing
         dur *= self.nodes[pod.node].slow_factor
+        if self.chaos is not None and dur > 0.0:
+            # seeded mid-run crash (chaos plane): fires strictly before
+            # the success finish, which then no-ops on phase != RUNNING;
+            # unlike node loss this charges the §4.5 retry budget
+            crash_after = self.chaos.task_crash_draw(dur)
+            if crash_after is not None:
+                self.sim.at(self.sim.t + crash_after, self._finish,
+                            note="chaos-crash", args=(pod, FAILED))
         return self.sim.t + (dur if dur > 0.0 else 0.0)
 
     def _start(self, pod: PodObj):
@@ -737,6 +769,61 @@ class Cluster:
         return True
 
     # ---- node failure (fault-tolerance substrate) -------------------------
+    def _fail_resident(self, pod: PodObj):
+        """Fail one pod resident on a dying node.  Surfaces like a
+        preemption (``evicted=True`` -> engine requeues through
+        admission, no retry-budget charge) but flagged ``node_lost``
+        so recovery metrics split the two causes."""
+        pod.evicted = True
+        pod.node_lost = True
+        pod._rv += 1
+        self.pods_lost += 1
+        if pod.phase == PENDING:
+            # bound but not yet started: the pending _start event will
+            # no-op on the phase guard; release and fail directly (the
+            # _finish path only handles RUNNING pods)
+            self._pending_pods.pop((pod.namespace, pod.name), None)
+            self._release(pod)
+            pod.phase = FAILED
+            pod.finished = self.sim.now()
+            pod._rv += 1
+            self._notify("pod", MODIFIED, pod)
+        else:
+            self._finish(pod, FAILED)
+
+    def kill_node(self, name: str, drain: bool = False) -> int:
+        """Chaos primitive: node crash (or graceful spot reclaim when
+        ``drain=True``).  Cordons the node out of the scheduler (node
+        arrays + informer aggregates track the MODIFIED event) and
+        fails every resident pod via :meth:`_fail_resident`; the
+        engine's requeue machinery re-admits the tasks with no retry
+        charge.  A drain evicts each pod through the apiserver
+        (charged to ``api_calls``); a crash charges nothing.  Returns
+        the number of pods disrupted.  ``restore_node`` undoes the
+        cordon."""
+        node = self.nodes[name]
+        if not node.ready:
+            return 0
+        node.ready = False
+        node._rv += 1
+        if self._c_free_cpu is not None:
+            self._c_ready[self._node_idx[name]] = 0
+        self._notify("node", MODIFIED, node)
+        lost = 0
+        for pod in list(self.pods.values()):
+            if pod.node == name and pod.phase in (PENDING, RUNNING):
+                if drain:
+                    self.api_calls += 1      # per-pod eviction round-trip
+                self._fail_resident(pod)
+                lost += 1
+        return lost
+
+    def drain_node(self, name: str) -> int:
+        """Spot/preemptible reclaim: like :meth:`kill_node` but each
+        resident pod is evicted through the apiserver (api pressure),
+        modeling the reclaim grace-period drain."""
+        return self.kill_node(name, drain=True)
+
     def fail_node(self, name: str):
         node = self.nodes[name]
         node.ready = False

@@ -73,6 +73,10 @@ class WorkflowState:
     unmet: Dict[str, int] = field(default_factory=dict)
     ready_pool: Set[str] = field(default_factory=set)
     order_idx: Dict[str, int] = field(default_factory=dict)
+    # task -> instant its pod was lost to a node kill/drain; popped when
+    # the replacement pod is created (time-to-reschedule metric).  Empty
+    # except under chaos — the hot path tests the dict, nothing more.
+    disrupted_at: Dict[str, float] = field(default_factory=dict)
 
     def __post_init__(self):
         for i, (tid, t) in enumerate(self.wf.tasks.items()):
@@ -128,6 +132,7 @@ class KubeAdaptorEngine:
         self._started = True
         self.inf.pods.add_handlers(on_update=self._pod_updated,
                                    on_delete=self._pod_deleted)
+        self.inf.nodes.add_handlers(on_update=self._node_updated)
         self.events.register("pod-succeeded", self._on_pod_succeeded)
         self.events.register("pod-failed", self._on_pod_failed)
         self.events.register("pod-removed", self._on_pod_removed)
@@ -157,6 +162,15 @@ class KubeAdaptorEngine:
         if pod.labels.get("engine") == self.name:
             self.arbiter.pod_removed(pod)
             self.events.emit("pod-removed", pod)
+
+    def _node_updated(self, node):
+        # a restored node (chaos plane) re-opens headroom, but no pod
+        # event follows it — without this wake, losing every running
+        # pod to a node kill leaves the arbiter's pending queue with no
+        # pod-removal trigger and the run strands silently.  Normal
+        # runs emit no node MODIFIED events, so this is chaos-only.
+        if node.ready:
+            self.arbiter.evaluate()
 
     # ------------------------------------------------------------------ #
     # workflow input interface
@@ -199,7 +213,8 @@ class KubeAdaptorEngine:
         self._create_pod(ws, task)
         return True
 
-    def _create_pod(self, ws: WorkflowState, task: Task, twin: bool = False):
+    def _create_pod(self, ws: WorkflowState, task: Task, twin: bool = False,
+                    attempt: int = 0):
         name = task.id + ("-twin" if twin else "")
         if twin:
             labels = {"engine": self.name, "task": task.id,
@@ -228,27 +243,82 @@ class KubeAdaptorEngine:
                      volume=ws.pvc, labels=labels, tenant=ws.wf.tenant)
         ws.created.add(task.id)
         ws.ready_pool.discard(task.id)
+        if ws.disrupted_at and not twin:
+            # replacement for a pod lost to a node kill/drain: close
+            # the disruption window (time-to-reschedule percentile)
+            t0 = ws.disrupted_at.pop(task.id, None)
+            if t0 is not None:
+                self.metrics.note_rescheduled(self.sim.now() - t0)
         # charge headroom until the informer observes the pod — retried
         # pods and twins bypass admission but must not double-spend
+        # (the ledger is idempotent per pod name, so transient-fault
+        # retries of the same create re-use the original reservation)
         self.arbiter.reserve(ws.ns, name, ws.wf.tenant, cpu, mem)
         self.metrics.note_first_create_rec(ws.rec)
         self.cluster.create_pod(
             pod,
             error_cb=lambda reason, existing: self._on_create_error(
-                ws, task, reason, existing))
+                ws, task, reason, existing, twin, attempt))
+
+    def _fault_backoff(self, attempt: int) -> float:
+        """Capped exponential backoff for retryable apiserver faults,
+        with seeded jitter (chaos stream) to de-synchronize retry
+        storms — the §4.5 AlreadyExists delete+retry generalized."""
+        delay = min(self.p.api_fault_backoff_s * (2 ** attempt),
+                    self.p.api_fault_backoff_max_s)
+        chaos = self.cluster.chaos
+        if chaos is not None:
+            delay *= 0.5 + 0.5 * chaos.backoff_jitter()
+        return delay
+
+    def _retry_create(self, ws: WorkflowState, task: Task, twin: bool,
+                      attempt: int):
+        if ws.done:
+            return               # workflow tore down while backing off
+        self._create_pod(ws, task, twin=twin, attempt=attempt)
+
+    def _delete_pod(self, ws: WorkflowState, name: str,
+                    cb: Optional[Callable] = None, attempt: int = 0):
+        """``delete_pod`` with the transient-fault retry policy: every
+        engine-side deletion routes through here so a chaos-injected
+        "Unavailable" is re-issued after ``_fault_backoff`` instead of
+        silently dropping the deletion (which would strand the §4.6
+        trigger chain waiting on the DELETED event)."""
+        def on_error(_reason, _key):
+            if ws.done:
+                return           # namespace cascade owns cleanup now
+            if attempt >= self.p.max_api_fault_retries:
+                raise RuntimeError(
+                    f"{ws.ns}/{name}: apiserver unavailable after "
+                    f"{attempt} delete retries")
+            self.sim.after(self._fault_backoff(attempt), self._delete_pod,
+                           note="api-retry", args=(ws, name, cb, attempt + 1))
+        self.cluster.delete_pod(ws.ns, name, cb=cb, error_cb=on_error)
 
     def _on_create_error(self, ws: WorkflowState, task: Task, reason: str,
-                         existing: PodObj):
+                         existing: PodObj, twin: bool = False,
+                         attempt: int = 0):
         # §4.5: duplicate pod -> destroy it, back off, request creation again
         if reason == "AlreadyExists":
-            self.cluster.delete_pod(
-                ws.ns, existing.name,
+            self._delete_pod(
+                ws, existing.name,
                 cb=lambda _p: self.sim.after(
                     self.p.create_retry_backoff,
                     lambda: self._create_pod(ws, task)))
         elif reason == "NamespaceNotFound" and not ws.done:
             self.cluster.create_namespace(
                 ws.ns, cb=lambda _ns: self._create_pod(ws, task))
+        elif reason == "Unavailable" and not ws.done:
+            # transient apiserver fault (chaos plane): retryable —
+            # capped exponential backoff + jitter, then raise (a real
+            # outage must not masquerade as a hung run)
+            if attempt >= self.p.max_api_fault_retries:
+                raise RuntimeError(
+                    f"{ws.ns}/{task.id}: apiserver unavailable after "
+                    f"{attempt} create retries")
+            self.sim.after(self._fault_backoff(attempt), self._retry_create,
+                           note="api-retry",
+                           args=(ws, task, twin, attempt + 1))
 
     # ------------------------------------------------------------------ #
     # event callbacks (the §4.6 trigger chain)
@@ -261,11 +331,11 @@ class KubeAdaptorEngine:
         if task_id not in ws.completed:
             self.metrics.note_finish_rec(ws.rec, task_id)
         # destruction module removes the finished pod (twin too)
-        self.cluster.delete_pod(pod.namespace, pod.name)
+        self._delete_pod(ws, pod.name)
         if task_id in ws.speculated:
             other = task_id + ("-twin" if pod.name == task_id else "")
             if other != pod.name:
-                self.cluster.delete_pod(pod.namespace, other)
+                self._delete_pod(ws, other)
 
     def _on_pod_removed(self, pod: PodObj):
         ws = self._mine(pod)
@@ -289,16 +359,28 @@ class KubeAdaptorEngine:
             return
         tid = pod.task_id
         if tid in ws.completed:          # twin already finished the task
-            self.cluster.delete_pod(pod.namespace, pod.name)
+            self._delete_pod(ws, pod.name)
             return
         if getattr(pod, "evicted", False):
-            # preempted by the admission pipeline: not a failure — the
-            # task re-enters the ready pool and re-queues through
-            # admission (it must not steal back the freed headroom),
-            # with no retry-budget charge
-            ws.rec.preempted += 1
+            # preempted by the admission pipeline — or disrupted by a
+            # node kill/drain (node_lost): not a failure — the task
+            # re-enters the ready pool and re-queues through admission
+            # (it must not steal back the freed headroom), with no
+            # retry-budget charge
+            if getattr(pod, "node_lost", False):
+                ws.rec.node_lost += 1
+                if not pod.name.endswith("-twin"):
+                    ws.disrupted_at[tid] = self.sim.now()
+            else:
+                ws.rec.preempted += 1
 
             def requeue(_p):
+                if ws.done:
+                    return               # evicted in the same instant the
+                #                          workflow tore down: the namespace
+                #                          cascade owns cleanup — re-adding
+                #                          the task to ready_pool here would
+                #                          double-count it into a dead run
                 if pod.name.endswith("-twin"):
                     return               # the RUNNING primary still owns the
                 #                          task — touching created/ready here
@@ -307,7 +389,7 @@ class KubeAdaptorEngine:
                 if tid not in ws.completed and ws.unmet[tid] == 0:
                     ws.ready_pool.add(tid)
                 self._submit_ready(ws)
-            self.cluster.delete_pod(pod.namespace, pod.name, cb=requeue)
+            self._delete_pod(ws, pod.name, cb=requeue)
             return
         n = ws.retries.get(tid, 0) + 1
         ws.retries[tid] = n
@@ -323,13 +405,19 @@ class KubeAdaptorEngine:
             raise RuntimeError(f"{ws.ns}/{tid} exceeded retries")
         # remove the failed pod, then request generation again (§4.5)
         def recreate(_p):
+            if ws.done:
+                return                   # failed while the workflow was
+            #                              already being torn down — a new
+            #                              pod would land in the dying
+            #                              namespace and resurrect state
+            #                              the cascade just removed
             ws.created.discard(tid)
             if tid not in ws.completed and ws.unmet[tid] == 0:
                 ws.ready_pool.add(tid)   # retry: eligible again
             if pod.name.endswith("-twin"):
                 return                   # only the primary is retried
             self._create_pod(ws, task)
-        self.cluster.delete_pod(pod.namespace, pod.name, cb=recreate)
+        self._delete_pod(ws, pod.name, cb=recreate)
 
     # ------------------------------------------------------------------ #
     # straggler mitigation (speculative twin)

@@ -27,6 +27,18 @@ invalidation, no aggregate churn, no reservation-sync candidate.  The
 skip is exact — an unchanged entry cannot change any aggregate, any
 lister's contents, or any reservation's droppability.
 
+Chaos-plane interaction (ISSUE 7): node kill/drain/restore emit node
+MODIFIED watch events — the only producers of such events besides
+``fail_node``/``restore_node`` — so the node cache, the
+generation-cached node lister, and ``ResourceGatherer.allocatable()``
+(keyed on ``nodes.generation``) all see cordons the same way they see
+any other node change, and the engine's node-update handler re-wakes
+admission when capacity returns.  Pods failed by a node loss arrive
+as ordinary pod MODIFIED events (phase Failed, ``node_lost=True``),
+so the non-terminal requested-resource aggregates shed the lost pods
+with no special casing.  Normal runs emit zero node events, which is
+why registering the node-update handler costs nothing in bit-identity.
+
 Resync now *reconciles*: keys whose objects vanished from the listed
 set without a DELETED watch event (a missed event) are dropped and
 their ``on_delete`` handlers fired. A key must be stale for two

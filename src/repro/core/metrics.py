@@ -78,6 +78,7 @@ class WorkflowRecord:
     finishes: Dict[str, float] = field(default_factory=dict)
     retries: int = 0
     preempted: int = 0             # task pods evicted by the Preempt stage
+    node_lost: int = 0             # task pods lost to node kills/drains
     failed: bool = False           # retry budget exhausted (fail-workflow)
     failure: str = ""
 
@@ -114,12 +115,14 @@ class TenantAgg:
     lc_sum: float = 0.0
     lc_n: int = 0
     preempted: int = 0
+    node_lost: int = 0
     retries: int = 0
     deadline_hits: int = 0
 
     def fold(self, rec: "WorkflowRecord", deadline_s: float = 0.0):
         self.workflows += 1
         self.preempted += rec.preempted
+        self.node_lost += rec.node_lost
         self.retries += rec.retries
         if rec.failed:
             self.failed += 1
@@ -153,6 +156,7 @@ class TenantAgg:
         self.lc_sum += other.lc_sum
         self.lc_n += other.lc_n
         self.preempted += other.preempted
+        self.node_lost += other.node_lost
         self.retries += other.retries
         self.deadline_hits += other.deadline_hits
         return self
@@ -173,6 +177,7 @@ class TenantAgg:
             "admission_deferrals": float(deferrals),
             "quota_rejects": float(quota_rejects),
             "preempted": float(self.preempted),
+            "node_lost": float(self.node_lost),
         }
         if deadline_s > 0:
             row["deadline_s"] = deadline_s
@@ -201,8 +206,13 @@ class MetricsPartial:
     tenant_deadlines: Dict[str, float] = field(default_factory=dict)
     usage: Dict[str, StepAccumulator] = field(default_factory=dict)
     usage_basis: str = "event"
+    # chaos recovery: disruption -> replacement-create times (seconds),
+    # exactly mergeable like every other StreamingStat (Chan variance,
+    # reservoir union) — empty outside chaos runs
+    resched: StreamingStat = field(default_factory=StreamingStat)
 
     def merge(self, other: "MetricsPartial") -> "MetricsPartial":
+        self.resched.merge(other.resched)
         for tenant, agg in other.tenant_aggs.items():
             mine = self.tenant_aggs.get(tenant)
             if mine is None:
@@ -251,6 +261,24 @@ class MetricsPartial:
     @property
     def workflows(self) -> int:
         return sum(a.workflows for a in self.tenant_aggs.values())
+
+    def recovery_summary(self) -> Dict[str, float]:
+        """Recovery accounting rollup: node_lost/preempted splits from
+        the tenant aggregates plus time-to-reschedule percentiles."""
+        st = self.resched
+        out = {
+            "node_lost": float(sum(a.node_lost
+                                   for a in self.tenant_aggs.values())),
+            "preempted": float(sum(a.preempted
+                                   for a in self.tenant_aggs.values())),
+            "rescheduled": float(st.count),
+        }
+        if st.count:
+            out["resched_mean_s"] = st.mean
+            out["resched_p50_s"] = st.percentile(50)
+            out["resched_p95_s"] = st.percentile(95)
+            out["resched_max_s"] = st.max
+        return out
 
 
 def _copy_acc(acc: StepAccumulator) -> StepAccumulator:
@@ -336,6 +364,8 @@ class MetricsCollector:
         self.admission_deferrals: Dict[str, int] = {}
         self.quota_rejects: Dict[str, int] = {}       # tenant -> count
         self.tenant_deadlines: Dict[str, float] = {}  # tenant -> SLO seconds
+        # chaos recovery: disruption -> replacement-create latency
+        self.resched_stat = StreamingStat()
         self._sampling = False
         # event-driven accounting: exact step accumulators fed by the
         # cluster's bind/release hook — no polling daemon
@@ -418,6 +448,11 @@ class MetricsCollector:
         rec = self.wf_record(wf)
         rec.failed = True
         rec.failure = reason
+
+    def note_rescheduled(self, dt: float):
+        """A node-loss-disrupted task got its replacement pod created
+        ``dt`` seconds after the disruption (time-to-reschedule)."""
+        self.resched_stat.add(dt)
 
     def note_ns_created(self, wf: Workflow):
         self.wf_record(wf).ns_created = self.sim.now()
@@ -723,7 +758,8 @@ class MetricsCollector:
             admission_deferrals=dict(self.admission_deferrals),
             quota_rejects=dict(self.quota_rejects),
             tenant_deadlines=dict(self.tenant_deadlines),
-            usage=usage, usage_basis=basis)
+            usage=usage, usage_basis=basis,
+            resched=self.resched_stat)
 
     def tenant_summary(self) -> Dict[str, Dict[str, float]]:
         if self.fold_completed:
@@ -755,6 +791,7 @@ class MetricsCollector:
                     float(self.admission_deferrals.get(tenant, 0)),
                 "quota_rejects": float(self.quota_rejects.get(tenant, 0)),
                 "preempted": float(sum(r.preempted for r in recs)),
+                "node_lost": float(sum(r.node_lost for r in recs)),
             }
             # per-stream SLO: deadline hit-rate over *completed* runs
             # (failed/unfinished workflows are neither hit nor miss —

@@ -32,6 +32,7 @@ from typing import Optional
 
 from repro.core import calibration as cal
 from repro.core.baselines import ArgoLikeEngine, BatchJobEngine, DirectSubmitEngine
+from repro.core.chaos import ChaosInjector, ChaosSchedule
 from repro.core.cluster import Cluster
 from repro.core.dag import Workflow
 from repro.core.engine import KubeAdaptorEngine
@@ -62,6 +63,7 @@ class RunResult:
     api_calls: int
     gateway: Optional[WorkflowGateway] = None
     arbiter: Optional[AdmissionArbiter] = None
+    chaos: Optional[ChaosInjector] = None
 
 
 class ControlPlane:
@@ -81,7 +83,8 @@ class ControlPlane:
                  lifecycle: Optional[str] = None,
                  queue: Optional[str] = None,
                  fold_completed: bool = False,
-                 capture_trace: bool = True):
+                 capture_trace: bool = True,
+                 chaos: Optional[ChaosSchedule] = None):
         if engine_name not in ENGINES:
             raise ValueError(f"unknown engine {engine_name!r}; "
                              f"expected one of {sorted(ENGINES)}")
@@ -105,6 +108,11 @@ class ControlPlane:
                                         usage_mode=usage_mode,
                                         fold_completed=fold_completed)
         self.arbiter: Optional[AdmissionArbiter] = None
+        # seeded fault injection (ISSUE 7): chaos=None performs zero
+        # draws — bit-identical to a chaos-free build
+        self.chaos: Optional[ChaosInjector] = None
+        if chaos is not None:
+            self.chaos = ChaosInjector(self.sim, self.cluster, chaos)
 
         if engine_name == "kubeadaptor":
             self.informers = InformerSet(self.sim, self.cluster, params)
@@ -204,7 +212,8 @@ class ControlPlane:
         return RunResult(metrics=self.metrics, cluster=self.cluster,
                          sim=self.sim, engine=self.engine,
                          api_calls=self.cluster.api_calls,
-                         gateway=self.gateway, arbiter=self.arbiter)
+                         gateway=self.gateway, arbiter=self.arbiter,
+                         chaos=self.chaos)
 
 
 def run_experiment(engine_name: str, workflow: Workflow, repeats: int = 1,

@@ -24,6 +24,23 @@ Determinism:
   mode (pinned by tests/test_shard_plane.py), which makes the fork
   path testable without fork-sensitive asserts.
 
+Failure recovery (ISSUE 7): the PR-6 fork path was a blocking
+``Pool.map`` — a worker dying mid-shard (OOM kill, segfault, spot
+reclaim of the parent's host) hung the parent forever.  Workers now
+run as individual ``Process``es reporting over one-way pipes: a
+heartbeat thread proves liveness, exceptions serialize back as
+structured error messages, and the parent detects dead processes,
+stale heartbeats and a global join timeout.  ``on_shard_failure``
+picks the policy: ``"raise"`` surfaces a ``ShardFailure`` naming the
+shard and its tenants; ``"restart"`` respawns the shard from its
+recorded spec (same tenant partition, same spawned seed — the rerun
+is deterministic, so the merged result is unchanged); ``"degrade"``
+merges the surviving shards and flags the result ``degraded=True``
+with the failure manifest.  Chaos schedules fan out with the same
+spawning discipline: ``ChaosSchedule.spawn(i)`` derives each shard's
+decorrelated chaos stream, and per-shard chaos counters merge by
+summation (``ShardedRunResult.chaos_counters``).
+
 Throughput accounting on a sharded run: shards execute in waves of
 ``shard_procs`` OS processes (default ``os.cpu_count()``), so each
 event loop runs unoversubscribed.  The aggregate ``events_per_sec``
@@ -42,12 +59,27 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import calibration as cal
+from repro.core.chaos import ChaosSchedule
 from repro.core.metrics import MetricsPartial
 from repro.core.runner import ControlPlane
 from repro.core.stats import StreamingStat
 
 __all__ = ["shard_of", "shard_seed", "partition_nodes", "ShardSpec",
-           "ShardedControlPlane", "ShardedRunResult"]
+           "ShardFailure", "ShardedControlPlane", "ShardedRunResult"]
+
+
+class ShardFailure(RuntimeError):
+    """A shard worker failed (died, raised, or timed out).  Structured:
+    names the shard, the tenants stranded on it, and the reason — the
+    base signal for the restart/degrade recovery modes."""
+
+    def __init__(self, shard: int, tenants: List[str], reason: str):
+        self.shard = shard
+        self.tenants = list(tenants)
+        self.reason = reason
+        super().__init__(
+            f"shard {shard} failed ({reason}); stranded tenants: "
+            f"{', '.join(self.tenants) or '(none)'}")
 
 
 def shard_of(tenant: str, workers: int) -> int:
@@ -101,6 +133,15 @@ class ShardSpec:
     horizon_s: float = 500_000.0
     record_bindings: bool = False
     profile: bool = False
+    chaos: Optional[ChaosSchedule] = None     # already spawned per shard
+
+
+def _spec_tenants(spec: ShardSpec) -> List[str]:
+    """Tenants routed to this shard (for ShardFailure manifests)."""
+    tenants = {s["tenant"] for s in spec.streams}
+    tenants.update(r["tenant"] for r in spec.trace_records)
+    tenants.update(spec.trace_tenants)
+    return sorted(tenants)
 
 
 def _build_shard_plane(spec: ShardSpec) -> ControlPlane:
@@ -117,7 +158,7 @@ def _build_shard_plane(spec: ShardSpec) -> ControlPlane:
         sample_mode=spec.sample_mode, usage_mode=spec.usage_mode,
         retain_pod_log=spec.retain_pod_log, lifecycle=spec.lifecycle,
         queue=spec.queue, fold_completed=spec.fold_completed,
-        capture_trace=spec.capture_trace)
+        capture_trace=spec.capture_trace, chaos=spec.chaos)
     for stream in spec.streams:
         plane.add_stream(**stream)
     if spec.trace_records:
@@ -190,8 +231,9 @@ def _run_shard(spec: ShardSpec) -> dict:
         "failed_workflows": partial.failed,
         "arbiter": (res.arbiter.counters()
                     if res.arbiter is not None else {}),
-        # per-process high-water mark: with maxtasksperchild=1 each
-        # worker runs exactly one shard, so this is the shard's own RSS
+        "chaos": (res.chaos.counters() if res.chaos is not None else None),
+        # per-process high-water mark: each worker process runs exactly
+        # one shard, so this is the shard's own RSS
         "peak_rss_mib": _resource.getrusage(
             _resource.RUSAGE_SELF).ru_maxrss / 1024.0,
         "metrics_partial": partial,
@@ -200,6 +242,57 @@ def _run_shard(spec: ShardSpec) -> dict:
         "bindings": bindings if spec.record_bindings else None,
     }
     return record
+
+
+def _shard_worker_main(spec: ShardSpec, conn, heartbeat_s: float,
+                       die: bool = False) -> None:
+    """Forked worker entrypoint: run one shard, stream liveness.
+
+    A daemon thread sends ``("heartbeat", index)`` every
+    ``heartbeat_s`` (the sim loop's pure-Python stretches yield the GIL
+    every switch interval and the native scheduler releases it outright,
+    so beats flow while the shard computes).  The shard's result or a
+    serialized exception goes back over the same pipe — the parent
+    never blocks on a silent worker again.  ``die`` is the test hook
+    (REPRO_SHARD_KILL): hard-exit before running, simulating SIGKILL.
+    """
+    import threading
+    import traceback as _traceback
+
+    if die:
+        os._exit(42)
+
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def beat():
+        while not stop.wait(heartbeat_s):
+            with lock:
+                try:
+                    conn.send(("heartbeat", spec.index))
+                except OSError:
+                    return
+
+    threading.Thread(target=beat, daemon=True).start()
+    try:
+        record = _run_shard(spec)
+    except BaseException as exc:
+        stop.set()
+        with lock:
+            try:
+                conn.send(("error", {
+                    "shard": spec.index,
+                    "exc_type": type(exc).__name__,
+                    "message": str(exc),
+                    "traceback": _traceback.format_exc(),
+                }))
+            except OSError:
+                pass
+        os._exit(1)
+    stop.set()
+    with lock:
+        conn.send(("result", record))
+    conn.close()
 
 
 @dataclass
@@ -213,12 +306,18 @@ class ShardedRunResult:
     merged pod-execution stat.  ``loop_wall_s`` is the max shard loop
     wall (the weak-scaling denominator — see module docstring);
     ``wall_s`` is the parent's true end-to-end wall.
+
+    ``degraded`` is True when ``on_shard_failure="degrade"`` merged a
+    partial fleet; ``failures`` lists the dropped shards
+    (``{"shard", "tenants", "reason", "restarts"}``).
     """
     workers: int
     shards: List[dict]
     metrics: MetricsPartial
     exec_stat: Optional[StreamingStat]
     wall_s: float
+    degraded: bool = False
+    failures: List[dict] = field(default_factory=list)
 
     @property
     def events(self) -> int:
@@ -285,6 +384,24 @@ class ShardedRunResult:
                 out[key] = out.get(key, 0) + val
         return out
 
+    def chaos_counters(self) -> Dict[str, float]:
+        """Summed chaos counters across shards (empty dict when no
+        shard ran with a chaos schedule) — exactly mergeable because
+        every counter is a per-shard sum."""
+        out: Dict[str, float] = {}
+        for s in self.shards:
+            c = s.get("chaos")
+            if not c:
+                continue
+            for key, val in c.items():
+                out[key] = out.get(key, 0) + val
+        return out
+
+    def recovery_summary(self) -> Dict[str, float]:
+        """Merged disruption/recovery accounting (see
+        ``MetricsPartial.recovery_summary``)."""
+        return self.metrics.recovery_summary()
+
     def tenant_summary(self) -> Dict[str, Dict[str, float]]:
         return self.metrics.tenant_summary()
 
@@ -336,15 +453,30 @@ class ShardedControlPlane:
                  processes: bool = True,
                  shard_procs: Optional[int] = None,
                  record_bindings: bool = False,
-                 profile: bool = False):
+                 profile: bool = False,
+                 chaos: Optional[ChaosSchedule] = None,
+                 on_shard_failure: str = "raise",
+                 shard_timeout_s: Optional[float] = None,
+                 heartbeat_s: float = 2.0,
+                 heartbeat_timeout_s: float = 60.0,
+                 max_shard_restarts: int = 1):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         if cluster_cfg.n_nodes < workers:
             raise ValueError(f"{cluster_cfg.n_nodes} nodes cannot be "
                              f"sliced across {workers} shards")
+        if on_shard_failure not in ("raise", "restart", "degrade"):
+            raise ValueError(f"unknown on_shard_failure "
+                             f"{on_shard_failure!r}; expected "
+                             f"'raise', 'restart', or 'degrade'")
         self.workers = workers
         self.processes = processes
         self.shard_procs = shard_procs
+        self.on_shard_failure = on_shard_failure
+        self.shard_timeout_s = shard_timeout_s
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.max_shard_restarts = max_shard_restarts
         slices = partition_nodes(cluster_cfg.n_nodes, workers)
         self.specs = [ShardSpec(
             index=i, workers=workers, seed=shard_seed(seed, i),
@@ -356,7 +488,8 @@ class ShardedControlPlane:
             usage_mode=usage_mode, retain_pod_log=retain_pod_log,
             lifecycle=lifecycle, queue=queue,
             fold_completed=fold_completed, capture_trace=capture_trace,
-            record_bindings=record_bindings, profile=profile)
+            record_bindings=record_bindings, profile=profile,
+            chaos=chaos.spawn(i) if chaos is not None else None)
             for i in range(workers)]
 
     # -- tenancy knobs (ControlPlane API, routed by tenant hash) ----------
@@ -395,9 +528,9 @@ class ShardedControlPlane:
             spec.horizon_s = horizon_s
         t0 = _time.perf_counter()
         if self.processes and self.workers > 1:
-            records = self._run_forked()
+            records, failures = self._run_forked()
         else:
-            records = [_run_shard(spec) for spec in self.specs]
+            records, failures = self._run_inline()
         wall = _time.perf_counter() - t0
         records.sort(key=lambda r: r["shard"])
 
@@ -412,17 +545,171 @@ class ShardedControlPlane:
                 exec_stat.merge(st)
         return ShardedRunResult(workers=self.workers, shards=records,
                                 metrics=merged, exec_stat=exec_stat,
-                                wall_s=wall)
+                                wall_s=wall, degraded=bool(failures),
+                                failures=failures)
 
-    def _run_forked(self) -> List[dict]:
+    def _failure_info(self, index: int, reason: str,
+                      restarts: int) -> dict:
+        return {"shard": index,
+                "tenants": _spec_tenants(self.specs[index]),
+                "reason": reason, "restarts": restarts}
+
+    def _run_inline(self) -> Tuple[List[dict], List[dict]]:
+        """Sequential in-process execution with the same
+        ``on_shard_failure`` policy as the fork path.  Restarting a
+        deterministic in-process exception will fail again (documented
+        — restart is for environmental deaths, which only the fork
+        path can exhibit), after which the policy falls through to
+        raise."""
+        records: List[dict] = []
+        failures: List[dict] = []
+        for spec in self.specs:
+            attempt = 0
+            while True:
+                try:
+                    records.append(_run_shard(spec))
+                    break
+                except Exception as exc:
+                    reason = f"{type(exc).__name__}: {exc}"
+                    if (self.on_shard_failure == "restart"
+                            and attempt < self.max_shard_restarts):
+                        attempt += 1
+                        continue
+                    if self.on_shard_failure == "degrade":
+                        failures.append(self._failure_info(
+                            spec.index, reason, attempt))
+                        break
+                    raise ShardFailure(spec.index, _spec_tenants(spec),
+                                       reason) from exc
+        return records, failures
+
+    def _run_forked(self) -> Tuple[List[dict], List[dict]]:
+        """Fan the shard specs out as one ``Process`` per shard (waves
+        of ``shard_procs``, so no loop is oversubscribed), supervised
+        over one-way pipes.  A shard fails when its worker sends an
+        error, dies without a result, goes heartbeat-silent for
+        ``heartbeat_timeout_s``, or the global ``shard_timeout_s``
+        join deadline passes — then ``on_shard_failure`` decides:
+        raise ShardFailure, respawn the same spec (deterministic, so
+        the merged result is unchanged), or drop the shard and merge
+        the survivors flagged degraded."""
         import multiprocessing as mp
+        import time as _time
+        from multiprocessing import connection as mp_conn
+
         ctx = mp.get_context("fork")
-        wave = self.shard_procs or os.cpu_count() or 1
-        # maxtasksperchild=1: a fresh process per shard, so each
-        # worker's RUSAGE_SELF high-water mark is that shard's own RSS
-        # (the per-shard self-report the RSS gate trusts) and no state
-        # bleeds between shards.  The pool keeps at most ``wave``
-        # loops running at once so none is oversubscribed.
-        with ctx.Pool(processes=min(wave, self.workers),
-                      maxtasksperchild=1) as pool:
-            return pool.map(_run_shard, self.specs, chunksize=1)
+        wave = min(self.shard_procs or os.cpu_count() or 1, self.workers)
+        kill_env = os.environ.get("REPRO_SHARD_KILL")
+        deadline = (_time.monotonic() + self.shard_timeout_s
+                    if self.shard_timeout_s is not None else None)
+
+        todo = list(range(self.workers))
+        restarts: Dict[int, int] = {}
+        live: Dict[int, list] = {}      # index -> [proc, conn, last_beat]
+        records: Dict[int, dict] = {}
+        failures: List[dict] = []
+
+        def launch(i: int) -> None:
+            parent, child = ctx.Pipe(duplex=False)
+            # REPRO_SHARD_KILL=<index> (test hook): the shard's first
+            # incarnation hard-exits pre-run — a simulated SIGKILL.
+            # Restarted incarnations survive, so restart is testable.
+            die = kill_env == str(i) and not restarts.get(i)
+            proc = ctx.Process(target=_shard_worker_main,
+                               args=(self.specs[i], child,
+                                     self.heartbeat_s, die))
+            proc.start()
+            child.close()
+            live[i] = [proc, parent, _time.monotonic()]
+
+        def reap(i: int) -> None:
+            proc, conn, _ = live.pop(i)
+            try:
+                conn.close()
+            except OSError:
+                pass
+            if proc.is_alive():
+                proc.terminate()
+            proc.join(timeout=10.0)
+
+        def handle_failure(i: int, reason: str) -> None:
+            reap(i)
+            n = restarts.get(i, 0)
+            if (self.on_shard_failure == "restart"
+                    and n < self.max_shard_restarts):
+                restarts[i] = n + 1
+                todo.insert(0, i)
+                return
+            info = self._failure_info(i, reason, n)
+            if self.on_shard_failure == "degrade":
+                failures.append(info)
+                return
+            for j in list(live):
+                reap(j)
+            raise ShardFailure(i, info["tenants"], reason)
+
+        def drain(i: int) -> Optional[str]:
+            """Pull pending messages off shard i's pipe; returns a
+            failure reason, or None while healthy / once its result
+            landed (a dead worker's buffered result still counts)."""
+            proc, conn, _ = live[i]
+            try:
+                while conn.poll():
+                    msg = conn.recv()
+                    if msg[0] == "heartbeat":
+                        live[i][2] = _time.monotonic()
+                    elif msg[0] == "result":
+                        records[i] = msg[1]
+                        reap(i)
+                        return None
+                    elif msg[0] == "error":
+                        return (f"{msg[1]['exc_type']}: "
+                                f"{msg[1]['message']}")
+            except (EOFError, OSError):
+                return (f"worker died without result "
+                        f"(exit code {proc.exitcode})")
+            return None
+
+        while todo or live:
+            while todo and len(live) < wave:
+                launch(todo.pop(0))
+            conns = {entry[1]: i for i, entry in live.items()}
+            for conn in mp_conn.wait(list(conns),
+                                     timeout=min(1.0, self.heartbeat_s)):
+                i = conns[conn]
+                if i not in live:
+                    continue
+                reason = drain(i)
+                if reason is not None:
+                    handle_failure(i, reason)
+            now = _time.monotonic()
+            for i in list(live):
+                proc, _, last = live[i]
+                if not proc.is_alive():
+                    reason = drain(i) if i in live else None
+                    if i in live:       # no buffered result salvaged it
+                        handle_failure(
+                            i, reason or f"worker died without result "
+                                         f"(exit code {proc.exitcode})")
+                elif now - last > self.heartbeat_timeout_s:
+                    handle_failure(
+                        i, f"no heartbeat for "
+                           f"{self.heartbeat_timeout_s:.0f}s")
+            if deadline is not None and _time.monotonic() > deadline:
+                for i in list(live):
+                    handle_failure(
+                        i, f"shard join timeout "
+                           f"({self.shard_timeout_s:.0f}s)")
+                while todo:             # never-launched shards at deadline
+                    i = todo.pop()
+                    info = self._failure_info(
+                        i, "not started before shard join timeout",
+                        restarts.get(i, 0))
+                    if self.on_shard_failure == "degrade":
+                        failures.append(info)
+                    else:
+                        for j in list(live):
+                            reap(j)
+                        raise ShardFailure(i, info["tenants"],
+                                           info["reason"])
+        return [records[i] for i in sorted(records)], failures

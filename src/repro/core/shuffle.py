@@ -37,6 +37,18 @@ fused cycle is pinned transitively by every binding-sequence hash
 tests/test_informer_views.py), which run on the native path wherever a
 compiler exists and on the fallback in CI's no-native job.
 
+Chaos-plane interaction (ISSUE 7): node loss removes capacity from
+the fused cycle without touching the word stream.  ``kill_node`` /
+``drain_node`` zero the node's slot in the ``ready[]`` array the
+native cycle consults (both in its cycle-start free-capacity maxima
+and in the first-fit check), exactly as ``fail_node`` always has, and
+``restore_node`` writes it back — so a cordoned node is simply never
+bound to while every shuffle still consumes its full draw sequence.
+That is what keeps a chaos-free run bit-identical to PR 6 and a fixed
+chaos seed exactly replayable: chaos draws come from a separate
+sha256-spawned stream (core/chaos.py) and the scheduler RNG's
+consumption schedule never changes.
+
 The wrapped ``random.Random`` must have no other consumers while a
 shuffler is attached (the python backend buffers words ahead; the
 native backend forks the generator state at construction and never
