@@ -29,7 +29,10 @@ Usage:
         [--chaos-node-kill-interval 0] [--chaos-drain-interval 0] \
         [--chaos-node-downtime 0] [--chaos-api-fault-rate 0] \
         [--chaos-task-crash-rate 0] [--chaos-start-after 0] \
-        [--chaos-seed 0] [--require-complete] [--append]
+        [--chaos-seed 0] [--require-complete] [--append] \
+        [--placement first-fit|scored-spread|scored-pack] \
+        [--node-mix uniform|big-small|cpu-mem-skew] \
+        [--deschedule-interval 0] [--deschedule-threshold 0.9]
 
 ``--budget-s`` exits 2 when total wall time exceeds the budget;
 ``--min-events-per-sec`` / ``--max-events-per-pod`` /
@@ -98,6 +101,27 @@ across all six policies.  ``--append`` merges the new tiers into an
 existing ``--out`` report instead of overwriting it, so the chaos
 tier can ride alongside previously recorded tiers.
 
+Heterogeneous placement tier (ISSUE 8): ``--node-mix`` swaps the
+uniform ``PaperCluster`` for a ``hetero_cluster`` preset
+(``big-small`` or ``cpu-mem-skew`` — weighted node-class cycles whose
+per-node average equals the paper node, so total allocatable stays
+comparable), and ``--placement`` picks the node-selection mode:
+``first-fit`` (default, bit-identical to every pinned v5 binding
+hash) or the utilization-scored ``scored-spread`` /
+``scored-pack`` modes fused into the native scheduler cycle.  Scored
+placement consumes the identical shuffle word stream as first-fit —
+only the pick among feasible nodes changes.  ``--deschedule-interval``
+/ ``--deschedule-threshold`` arm the periodic descheduler daemon
+(repro.core.descheduler): pods evicted off hot nodes requeue through
+the recovery machinery with no retry-budget charge.  v6 rows add
+``placement``, ``node_hotspot`` (per-node peak-utilization
+mean/max/min/variance — the hotspot-variance comparison between
+first-fit and scored-spread is the tier's headline), ``rebalances``,
+``descheduler`` counters (when armed) and a ``p99`` tail in
+``pod_exec_s``; hetero scenarios record ``node_mix`` +
+``node_classes``.  ``--append`` refuses (exit 2) to merge tiers into
+a report written under a different schema version.
+
 The script still runs against the pre-optimization core (counters it
 introduced are read via getattr) so speedups can be measured by
 checking out two revisions and comparing ``wall_s``.
@@ -131,10 +155,11 @@ BATCH_DEADLINE_S = 3600.0
 # (sum over the 8 streams = 120%, so caps genuinely bind under load)
 PROD_QUOTA_FRAC = 0.20
 BATCH_QUOTA_FRAC = 0.10
-SCHEMA = "bench_scale/v5"
+SCHEMA = "bench_scale/v6"
 
 
-def _plane_kwargs(usage_mode, queue, lifecycle):
+def _plane_kwargs(usage_mode, queue, lifecycle, placement="first-fit",
+                  deschedule=None):
     """Knobs that only the optimized core understands."""
     params = inspect.signature(ControlPlane.__init__).parameters
     kw = {}
@@ -148,26 +173,42 @@ def _plane_kwargs(usage_mode, queue, lifecycle):
         kw["queue"] = queue
     if "lifecycle" in params and lifecycle:
         kw["lifecycle"] = lifecycle
+    if "placement" in params and placement != "first-fit":
+        kw["placement"] = placement
+    if "deschedule" in params and deschedule is not None:
+        kw["deschedule"] = deschedule
     return kw
+
+
+def _cluster_cfg(n_nodes, node_mix="uniform"):
+    """The tier's cluster config: the paper's uniform nodes, or a
+    heterogeneous node-class mix (ISSUE 8)."""
+    if node_mix and node_mix != "uniform":
+        return cal.hetero_cluster(n_nodes, node_mix)
+    return cal.PaperCluster(n_nodes=n_nodes)
 
 
 def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
                 queue=None, lifecycle=None, trace=None, workers=1,
                 shard_procs=None, processes=True, profile=False,
-                chaos=None):
+                chaos=None, placement="first-fit", node_mix="uniform",
+                deschedule=None):
+    cfg = _cluster_cfg(n_nodes, node_mix)
     if workers > 1:
         from repro.core.shard import ShardedControlPlane
         plane = ShardedControlPlane(
             workers, admission_policy=policy,
-            cluster_cfg=cal.PaperCluster(n_nodes=n_nodes), seed=seed,
+            cluster_cfg=cfg, seed=seed,
             fold_completed=True, capture_trace=False,
             shard_procs=shard_procs, processes=processes, profile=profile,
-            chaos=chaos, **_plane_kwargs(usage_mode, queue, lifecycle))
+            chaos=chaos, **_plane_kwargs(usage_mode, queue, lifecycle,
+                                         placement, deschedule))
     else:
         plane = ControlPlane("kubeadaptor", admission_policy=policy,
-                             cluster_cfg=cal.PaperCluster(n_nodes=n_nodes),
+                             cluster_cfg=cfg,
                              seed=seed, chaos=chaos,
-                             **_plane_kwargs(usage_mode, queue, lifecycle))
+                             **_plane_kwargs(usage_mode, queue, lifecycle,
+                                             placement, deschedule))
     if trace is not None:
         plane.add_trace(trace.get("arrivals", []),
                         tenants=trace.get("tenants"))
@@ -180,7 +221,10 @@ def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
     per, rem = divmod(n_workflows, n_streams)
     # enough closed-loop concurrency to keep ~666 pod slots/100 nodes busy
     conc = max(2, (n_nodes * 7) // (n_streams * 4))
-    total_cpu_m = n_nodes * cal.PaperCluster.node_cpu_m
+    # allocatable CPU from the actual node list: identical to
+    # n_nodes * node_cpu_m on the uniform cluster, and the true sum
+    # over the class cycle on a heterogeneous mix
+    total_cpu_m = sum(cpu for _, cpu, _ in cfg.nodes())
     # quota caps bind against what a stream's arbiter can actually see:
     # its own shard's slice of the cluster (= the whole cluster at
     # workers=1), keeping per-shard contention geometry tier-invariant
@@ -221,16 +265,20 @@ def _add_stream_accepts(name):
 
 def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
                usage_mode="event", queue=None, lifecycle=None, trace=None,
-               profile=False, workers=1, shard_procs=None, chaos=None):
+               profile=False, workers=1, shard_procs=None, chaos=None,
+               placement="first-fit", node_mix="uniform", deschedule=None):
     if workers > 1:
         return _run_policy_sharded(
             policy, n_workflows, n_nodes, seed, horizon_s=horizon_s,
             usage_mode=usage_mode, queue=queue, lifecycle=lifecycle,
             trace=trace, profile=profile, workers=workers,
-            shard_procs=shard_procs, chaos=chaos)
+            shard_procs=shard_procs, chaos=chaos, placement=placement,
+            node_mix=node_mix, deschedule=deschedule)
     plane = build_plane(policy, n_workflows, n_nodes, seed,
                         usage_mode=usage_mode, queue=queue,
-                        lifecycle=lifecycle, trace=trace, chaos=chaos)
+                        lifecycle=lifecycle, trace=trace, chaos=chaos,
+                        placement=placement, node_mix=node_mix,
+                        deschedule=deschedule)
     try:
         import repro.core.cluster as _cluster_mod
         copies0 = _cluster_mod.SNAPSHOTS_MADE
@@ -335,7 +383,21 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
         rec["pod_exec_s"] = {"count": exec_stat.count,
                              "mean": round(exec_stat.mean, 2),
                              "max": round(exec_stat.max, 2),
-                             "p95": round(exec_stat.percentile(95), 2)}
+                             "p95": round(exec_stat.percentile(95), 2),
+                             "p99": round(exec_stat.percentile(99), 2)}
+    # placement observables (ISSUE 8): per-node peak-utilization
+    # profile (the first-fit vs scored hotspot comparison), the active
+    # placement mode, and descheduler accounting when the daemon ran
+    rec["placement"] = getattr(res.cluster, "placement", "first-fit")
+    hotspot = getattr(res.cluster, "hotspot_summary", None)
+    if hotspot is not None:
+        rec["node_hotspot"] = {
+            k: (round(v, 6) if isinstance(v, float) else v)
+            for k, v in hotspot().items()}
+    rec["rebalances"] = getattr(res.cluster, "rebalances", 0)
+    desched = getattr(res, "descheduler", None)
+    if desched is not None:
+        rec["descheduler"] = desched.counters()
     # chaos/recovery observables (ISSUE 7): only emitted when a chaos
     # schedule was armed — chaos-free rows keep the exact v4 key set
     chaos_inj = getattr(res, "chaos", None)
@@ -350,7 +412,9 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
 def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
                         horizon_s=400_000.0, usage_mode="event", queue=None,
                         lifecycle=None, trace=None, profile=False,
-                        workers=2, shard_procs=None, chaos=None):
+                        workers=2, shard_procs=None, chaos=None,
+                        placement="first-fit", node_mix="uniform",
+                        deschedule=None):
     """One policy run through the tenant-partitioned control plane
     (repro.core.shard): same row schema as the unsharded path plus
     ``workers`` / ``shards[]`` / fork-proof RSS totals."""
@@ -360,7 +424,8 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
                         usage_mode=usage_mode, queue=queue,
                         lifecycle=lifecycle, trace=trace, workers=workers,
                         shard_procs=shard_procs, profile=profile,
-                        chaos=chaos)
+                        chaos=chaos, placement=placement, node_mix=node_mix,
+                        deschedule=deschedule)
     t0 = time.perf_counter()
     res = plane.run(horizon_s=horizon_s)
     wall = time.perf_counter() - t0
@@ -462,7 +527,18 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
         rec["pod_exec_s"] = {"count": res.exec_stat.count,
                              "mean": round(res.exec_stat.mean, 2),
                              "max": round(res.exec_stat.max, 2),
-                             "p95": round(res.exec_stat.percentile(95), 2)}
+                             "p95": round(res.exec_stat.percentile(95), 2),
+                             "p99": round(res.exec_stat.percentile(99), 2)}
+    # placement observables (ISSUE 8): hotspot profiles merge exactly
+    # across disjoint shard node slices
+    rec["placement"] = placement
+    rec["node_hotspot"] = {
+        k: (round(v, 6) if isinstance(v, float) else v)
+        for k, v in res.hotspot_summary().items()}
+    rec["rebalances"] = res.rebalances
+    desched_counters = res.descheduler_counters()
+    if desched_counters:
+        rec["descheduler"] = desched_counters
     # chaos/recovery observables (ISSUE 7): per-shard counters summed
     # by ShardedRunResult.chaos_counters; recovery merges exactly
     # across shards (node_lost/preempted are sums, resched percentiles
@@ -480,17 +556,33 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
 
 def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
                  queue=None, lifecycle=None, trace=None, trace_path=None,
-                 profile=False, workers=1, shard_procs=None, chaos=None):
+                 profile=False, workers=1, shard_procs=None, chaos=None,
+                 placement="first-fit", node_mix="uniform", deschedule=None):
     runs = [run_policy(p, n_workflows, n_nodes, seed, usage_mode=usage_mode,
                        queue=queue, lifecycle=lifecycle, trace=trace,
                        profile=profile, workers=workers,
-                       shard_procs=shard_procs, chaos=chaos)
+                       shard_procs=shard_procs, chaos=chaos,
+                       placement=placement, node_mix=node_mix,
+                       deschedule=deschedule)
             for p in policies]
     scenario = {"workflows": n_workflows, "nodes": n_nodes,
                 "node_cpu_m": cal.PaperCluster.node_cpu_m,
                 "node_mem_mi": cal.PaperCluster.node_mem_mi,
                 "seed": seed, "topologies": list(TOPOLOGIES),
                 "streams": 2 * len(TOPOLOGIES) * max(1, workers)}
+    if placement != "first-fit":
+        scenario["placement"] = placement
+    if node_mix and node_mix != "uniform":
+        cfg = _cluster_cfg(n_nodes, node_mix)
+        scenario["node_mix"] = node_mix
+        scenario["node_classes"] = [
+            {"name": c.name, "cpu_m": c.cpu_m, "mem_mi": c.mem_mi,
+             "weight": c.weight} for c in cfg.classes]
+    if deschedule is not None:
+        scenario["deschedule"] = {
+            "interval_s": deschedule.interval_s,
+            "util_threshold": deschedule.util_threshold,
+            "max_evict_per_node": deschedule.max_evict_per_node}
     if workers > 1:
         scenario["workers"] = workers
     if chaos is not None:
@@ -614,7 +706,26 @@ def main():
                          "recovery gate)")
     ap.add_argument("--append", action="store_true",
                     help="merge the new tiers into an existing --out "
-                         "report instead of overwriting it")
+                         "report instead of overwriting it (refuses — "
+                         "exit 2 — when the existing report was written "
+                         "under a different schema version)")
+    ap.add_argument("--placement", default="first-fit",
+                    choices=("first-fit", "scored-spread", "scored-pack"),
+                    help="node-selection mode: first-fit (bit-identical "
+                         "to v5 behavior) or utilization-scored "
+                         "spread/pack (same shuffle word stream)")
+    ap.add_argument("--node-mix", default="uniform",
+                    choices=("uniform", "big-small", "cpu-mem-skew"),
+                    help="cluster composition: the paper's uniform nodes "
+                         "or a heterogeneous node-class preset (per-node "
+                         "average equals the paper node)")
+    ap.add_argument("--deschedule-interval", type=float, default=0.0,
+                    help="descheduler daemon period in sim seconds "
+                         "(0 = daemon off)")
+    ap.add_argument("--deschedule-threshold", type=float, default=0.9,
+                    help="node utilization fraction above which the "
+                         "descheduler evicts (requeued pods are not "
+                         "charged retry budget)")
     args = ap.parse_args()
 
     policies = [p for p in args.policies.split(",") if p]
@@ -634,6 +745,12 @@ def main():
             api_fault_rate=args.chaos_api_fault_rate,
             task_crash_rate=args.chaos_task_crash_rate,
             start_after_s=args.chaos_start_after)
+    deschedule = None
+    if args.deschedule_interval > 0.0:
+        from repro.core.descheduler import DeschedulePolicy
+        deschedule = DeschedulePolicy(
+            interval_s=args.deschedule_interval,
+            util_threshold=args.deschedule_threshold)
     tiers = []
     for n_wf, n_nodes, n_workers in _parse_tiers(args):
         tier = run_scenario(n_wf, n_nodes, args.seed, policies,
@@ -643,7 +760,8 @@ def main():
                             trace=trace, trace_path=args.trace or None,
                             profile=args.profile, workers=n_workers,
                             shard_procs=args.shard_procs or None,
-                            chaos=chaos)
+                            chaos=chaos, placement=args.placement,
+                            node_mix=args.node_mix, deschedule=deschedule)
         tiers.append(tier)
         n_wf = tier["scenario"]["workflows"]
         shard_tag = f"/{n_workers}w" if n_workers > 1 else ""
@@ -662,9 +780,19 @@ def main():
         try:
             with open(args.out) as f:
                 prior = json.load(f)
-            out_tiers = prior.get("tiers", []) + tiers
         except FileNotFoundError:
-            pass
+            prior = None
+        if prior is not None:
+            # never splice rows across schema versions: a merged report
+            # must be interpretable under exactly one field contract
+            prior_schema = prior.get("schema")
+            if prior_schema != SCHEMA:
+                print(f"--append refused: {args.out} has schema "
+                      f"{prior_schema!r}, this build writes {SCHEMA!r}; "
+                      f"regenerate the report (or move it aside) instead "
+                      f"of mixing schema versions", file=sys.stderr)
+                raise SystemExit(2)
+            out_tiers = prior.get("tiers", []) + tiers
     report = {
         "schema": SCHEMA,
         "host": {"python": platform.python_version(),

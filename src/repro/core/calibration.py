@@ -82,6 +82,78 @@ class PaperCluster:
                      for i in range(self.n_nodes))
 
 
+@dataclass(frozen=True)
+class NodeClass:
+    """One capacity class in a heterogeneous cluster (the K3s-style
+    edge-zoo: big/small boxes, cpu- vs mem-skewed shapes).  ``weight``
+    is the class's relative share of the node count."""
+    name: str
+    cpu_m: int
+    mem_mi: int
+    weight: int = 1
+
+
+@dataclass(frozen=True)
+class HeteroCluster:
+    """Heterogeneous cluster config: ``n_nodes`` machines drawn from
+    ``classes`` by deterministic weighted round-robin (node ``i`` gets
+    the ``i mod cycle``-th entry of the weight-expanded class cycle),
+    so a fixed config always yields the same node list and any
+    ``dataclasses.replace(cfg, n_nodes=k)`` slice (the shard
+    partition) is a prefix-consistent mix of the same classes.
+
+    Drop-in for ``PaperCluster`` everywhere a cluster config is
+    consumed: ``nodes()`` has the same shape and the per-node
+    capacities flow through ``Cluster`` unchanged (node state, the
+    native free/ready mirrors and ``allocatable()`` are all per-node
+    already).  Every class must fit the paper task (1200m/1200Mi) or
+    its nodes can never bind a pod."""
+    n_nodes: int = 6
+    classes: Tuple[NodeClass, ...] = (
+        NodeClass("big", 16000, 30624, weight=1),
+        NodeClass("small", 4000, 7656, weight=2),
+    )
+
+    def class_cycle(self) -> Tuple[NodeClass, ...]:
+        cycle: Tuple[NodeClass, ...] = ()
+        for c in self.classes:
+            cycle += (c,) * max(1, c.weight)
+        return cycle
+
+    def nodes(self) -> Tuple[Tuple[str, int, int], ...]:
+        cycle = self.class_cycle()
+        return tuple((f"node{i+1}", cycle[i % len(cycle)].cpu_m,
+                      cycle[i % len(cycle)].mem_mi)
+                     for i in range(self.n_nodes))
+
+    def mix_label(self) -> str:
+        return "+".join(f"{c.name}x{c.weight}({c.cpu_m}m/{c.mem_mi}Mi)"
+                        for c in self.classes)
+
+
+# preset mixes: averages match the uniform paper node (8000m/15312Mi
+# per node when n_nodes divides the cycle length), so hetero tiers
+# keep total allocatable comparable to the uniform tiers
+NODE_MIXES = {
+    "big-small": (
+        NodeClass("big", 16000, 30624, weight=1),     # 2x paper node
+        NodeClass("small", 4000, 7656, weight=2),     # paper node / 2
+    ),
+    "cpu-mem-skew": (
+        NodeClass("cpu-heavy", 12000, 7656, weight=1),
+        NodeClass("mem-heavy", 4000, 22968, weight=1),
+    ),
+}
+
+
+def hetero_cluster(n_nodes: int, mix: str = "big-small") -> HeteroCluster:
+    """A preset heterogeneous config (see ``NODE_MIXES``)."""
+    if mix not in NODE_MIXES:
+        raise ValueError(f"unknown node mix {mix!r}; "
+                         f"expected one of {sorted(NODE_MIXES)}")
+    return HeteroCluster(n_nodes=n_nodes, classes=NODE_MIXES[mix])
+
+
 # Paper workload: stress -c 1 -m 100 -t 5 -> CPU+mem busy ~10s total,
 # requests = limits = 1200m / 1200Mi.
 TASK_DURATION_S = 10.0

@@ -38,6 +38,16 @@ way the sharded plane spawns per-shard scheduler seeds.
 fork boundary inside ``ShardSpec``); ``ChaosInjector`` is the live
 per-plane driver holding the RNG, the timers and the recovery
 counters.
+
+Heterogeneous node classes (ISSUE 8) need no special casing here:
+victims are picked uniformly over the READY names in the canonical
+node order, so big and small nodes are equally likely targets, and
+``kill_node``/``drain_node``/``restore_node`` write each node's OWN
+``cpu_alloc``/``mem_alloc`` back into the native free/ready mirrors —
+killing a 16-core node removes 16 cores, restoring it returns 16
+(pinned by tests/test_placement.py's hetero drain/restore
+regression).  The descheduler (core/descheduler.py) composes the same
+way: it draws nothing, so chaos replay identity is unaffected.
 """
 from __future__ import annotations
 

@@ -363,14 +363,17 @@ class KubeAdaptorEngine:
             return
         if getattr(pod, "evicted", False):
             # preempted by the admission pipeline — or disrupted by a
-            # node kill/drain (node_lost): not a failure — the task
-            # re-enters the ready pool and re-queues through admission
-            # (it must not steal back the freed headroom), with no
-            # retry-budget charge
+            # node kill/drain (node_lost) or a descheduler offload
+            # (rebalanced): not a failure — the task re-enters the
+            # ready pool and re-queues through admission (it must not
+            # steal back the freed headroom), with no retry-budget
+            # charge
             if getattr(pod, "node_lost", False):
                 ws.rec.node_lost += 1
                 if not pod.name.endswith("-twin"):
                     ws.disrupted_at[tid] = self.sim.now()
+            elif getattr(pod, "rebalanced", False):
+                ws.rec.rebalanced += 1
             else:
                 ws.rec.preempted += 1
 

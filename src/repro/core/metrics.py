@@ -79,6 +79,7 @@ class WorkflowRecord:
     retries: int = 0
     preempted: int = 0             # task pods evicted by the Preempt stage
     node_lost: int = 0             # task pods lost to node kills/drains
+    rebalanced: int = 0            # task pods offloaded by the descheduler
     failed: bool = False           # retry budget exhausted (fail-workflow)
     failure: str = ""
 
@@ -116,6 +117,7 @@ class TenantAgg:
     lc_n: int = 0
     preempted: int = 0
     node_lost: int = 0
+    rebalanced: int = 0
     retries: int = 0
     deadline_hits: int = 0
 
@@ -123,6 +125,7 @@ class TenantAgg:
         self.workflows += 1
         self.preempted += rec.preempted
         self.node_lost += rec.node_lost
+        self.rebalanced += rec.rebalanced
         self.retries += rec.retries
         if rec.failed:
             self.failed += 1
@@ -157,6 +160,7 @@ class TenantAgg:
         self.lc_n += other.lc_n
         self.preempted += other.preempted
         self.node_lost += other.node_lost
+        self.rebalanced += other.rebalanced
         self.retries += other.retries
         self.deadline_hits += other.deadline_hits
         return self
@@ -178,6 +182,7 @@ class TenantAgg:
             "quota_rejects": float(quota_rejects),
             "preempted": float(self.preempted),
             "node_lost": float(self.node_lost),
+            "rebalanced": float(self.rebalanced),
         }
         if deadline_s > 0:
             row["deadline_s"] = deadline_s
@@ -271,6 +276,8 @@ class MetricsPartial:
                                    for a in self.tenant_aggs.values())),
             "preempted": float(sum(a.preempted
                                    for a in self.tenant_aggs.values())),
+            "rebalanced": float(sum(a.rebalanced
+                                    for a in self.tenant_aggs.values())),
             "rescheduled": float(st.count),
         }
         if st.count:
@@ -792,6 +799,7 @@ class MetricsCollector:
                 "quota_rejects": float(self.quota_rejects.get(tenant, 0)),
                 "preempted": float(sum(r.preempted for r in recs)),
                 "node_lost": float(sum(r.node_lost for r in recs)),
+                "rebalanced": float(sum(r.rebalanced for r in recs)),
             }
             # per-stream SLO: deadline hit-rate over *completed* runs
             # (failed/unfinished workflows are neither hit nor miss —

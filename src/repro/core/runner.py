@@ -35,6 +35,7 @@ from repro.core.baselines import ArgoLikeEngine, BatchJobEngine, DirectSubmitEng
 from repro.core.chaos import ChaosInjector, ChaosSchedule
 from repro.core.cluster import Cluster
 from repro.core.dag import Workflow
+from repro.core.descheduler import Descheduler, DeschedulePolicy
 from repro.core.engine import KubeAdaptorEngine
 from repro.core.events import EventRegistry
 from repro.core.informer import InformerSet
@@ -64,6 +65,7 @@ class RunResult:
     gateway: Optional[WorkflowGateway] = None
     arbiter: Optional[AdmissionArbiter] = None
     chaos: Optional[ChaosInjector] = None
+    descheduler: Optional[Descheduler] = None
 
 
 class ControlPlane:
@@ -84,7 +86,9 @@ class ControlPlane:
                  queue: Optional[str] = None,
                  fold_completed: bool = False,
                  capture_trace: bool = True,
-                 chaos: Optional[ChaosSchedule] = None):
+                 chaos: Optional[ChaosSchedule] = None,
+                 placement: str = "first-fit",
+                 deschedule: Optional[DeschedulePolicy] = None):
         if engine_name not in ENGINES:
             raise ValueError(f"unknown engine {engine_name!r}; "
                              f"expected one of {sorted(ENGINES)}")
@@ -101,7 +105,7 @@ class ControlPlane:
         self.cluster = Cluster(self.sim, params, cluster_cfg,
                                payload_mode=payload_mode, seed=seed,
                                retain_pod_log=retain_pod_log,
-                               lifecycle=lifecycle)
+                               lifecycle=lifecycle, placement=placement)
         self.volumes = VolumeManager(self.sim, self.cluster, params)
         self.metrics = MetricsCollector(self.sim, self.cluster, params,
                                         sample_mode=sample_mode,
@@ -113,6 +117,12 @@ class ControlPlane:
         self.chaos: Optional[ChaosInjector] = None
         if chaos is not None:
             self.chaos = ChaosInjector(self.sim, self.cluster, chaos)
+        # periodic evict-to-rebalance daemon (ISSUE 8): None arms
+        # nothing — zero events, bit-identical to a descheduler-free run
+        self.descheduler: Optional[Descheduler] = None
+        if deschedule is not None:
+            self.descheduler = Descheduler(self.sim, self.cluster,
+                                           deschedule)
 
         if engine_name == "kubeadaptor":
             self.informers = InformerSet(self.sim, self.cluster, params)
@@ -213,7 +223,7 @@ class ControlPlane:
                          sim=self.sim, engine=self.engine,
                          api_calls=self.cluster.api_calls,
                          gateway=self.gateway, arbiter=self.arbiter,
-                         chaos=self.chaos)
+                         chaos=self.chaos, descheduler=self.descheduler)
 
 
 def run_experiment(engine_name: str, workflow: Workflow, repeats: int = 1,

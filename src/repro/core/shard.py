@@ -60,6 +60,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core import calibration as cal
 from repro.core.chaos import ChaosSchedule
+from repro.core.descheduler import DeschedulePolicy
 from repro.core.metrics import MetricsPartial
 from repro.core.runner import ControlPlane
 from repro.core.stats import StreamingStat
@@ -134,6 +135,8 @@ class ShardSpec:
     record_bindings: bool = False
     profile: bool = False
     chaos: Optional[ChaosSchedule] = None     # already spawned per shard
+    placement: str = "first-fit"              # scatter-cycle node pick
+    deschedule: Optional[DeschedulePolicy] = None  # per-shard daemon
 
 
 def _spec_tenants(spec: ShardSpec) -> List[str]:
@@ -158,7 +161,8 @@ def _build_shard_plane(spec: ShardSpec) -> ControlPlane:
         sample_mode=spec.sample_mode, usage_mode=spec.usage_mode,
         retain_pod_log=spec.retain_pod_log, lifecycle=spec.lifecycle,
         queue=spec.queue, fold_completed=spec.fold_completed,
-        capture_trace=spec.capture_trace, chaos=spec.chaos)
+        capture_trace=spec.capture_trace, chaos=spec.chaos,
+        placement=spec.placement, deschedule=spec.deschedule)
     for stream in spec.streams:
         plane.add_stream(**stream)
     if spec.trace_records:
@@ -232,6 +236,13 @@ def _run_shard(spec: ShardSpec) -> dict:
         "arbiter": (res.arbiter.counters()
                     if res.arbiter is not None else {}),
         "chaos": (res.chaos.counters() if res.chaos is not None else None),
+        # placement observables (ISSUE 8): per-shard hotspot profile
+        # (merged exactly by ShardedRunResult.hotspot_summary) plus
+        # descheduler accounting when the daemon was armed
+        "node_hotspot": res.cluster.hotspot_summary(),
+        "rebalances": getattr(res.cluster, "rebalances", 0),
+        "descheduler": (res.descheduler.counters()
+                        if res.descheduler is not None else None),
         # per-process high-water mark: each worker process runs exactly
         # one shard, so this is the shard's own RSS
         "peak_rss_mib": _resource.getrusage(
@@ -397,6 +408,63 @@ class ShardedRunResult:
                 out[key] = out.get(key, 0) + val
         return out
 
+    @property
+    def rebalances(self) -> int:
+        return sum(s.get("rebalances", 0) for s in self.shards)
+
+    def descheduler_counters(self) -> Dict[str, float]:
+        """Summed descheduler counters across shards (empty dict when
+        no shard armed a daemon).  Config echoes (interval/threshold)
+        are identical per shard, so keeping the last value is exact."""
+        out: Dict[str, float] = {}
+        for s in self.shards:
+            c = s.get("descheduler")
+            if not c:
+                continue
+            for key, val in c.items():
+                if key in ("interval_s", "util_threshold"):
+                    out[key] = val
+                else:
+                    out[key] = out.get(key, 0) + val
+        return out
+
+    def hotspot_summary(self) -> Dict[str, float]:
+        """Exact merge of the per-shard utilization profiles: the
+        union of shards is the whole cluster, so mean/variance combine
+        by the standard pooled-population identities and max/min by
+        max/min (both the peak and the time-weighted mean axes)."""
+        total_n = 0
+        acc = {"peak": [0.0, 0.0, 0.0, float("inf")],
+               "util": [0.0, 0.0, 0.0, float("inf")]}
+        keys = {"peak": ("mean_peak_util", "peak_util_variance",
+                         "max_peak_util", "min_peak_util"),
+                "util": ("mean_util", "util_variance",
+                         "max_mean_util", "min_mean_util")}
+        for s in self.shards:
+            h = s.get("node_hotspot")
+            if not h or not h.get("nodes"):
+                continue
+            n = h["nodes"]
+            total_n += n
+            for ax, (mk, vk, xk, nk) in keys.items():
+                a = acc[ax]
+                a[0] += n * h[mk]
+                a[1] += n * (h[vk] + h[mk] ** 2)
+                a[2] = max(a[2], h[xk])
+                a[3] = min(a[3], h[nk])
+        out = {"nodes": total_n}
+        for ax, (mk, vk, xk, nk) in keys.items():
+            a = acc[ax]
+            if not total_n:
+                out.update({mk: 0.0, vk: 0.0, xk: 0.0, nk: 0.0})
+                continue
+            mean = a[0] / total_n
+            out[mk] = mean
+            out[vk] = max(0.0, a[1] / total_n - mean * mean)
+            out[xk] = a[2]
+            out[nk] = a[3]
+        return out
+
     def recovery_summary(self) -> Dict[str, float]:
         """Merged disruption/recovery accounting (see
         ``MetricsPartial.recovery_summary``)."""
@@ -455,6 +523,8 @@ class ShardedControlPlane:
                  record_bindings: bool = False,
                  profile: bool = False,
                  chaos: Optional[ChaosSchedule] = None,
+                 placement: str = "first-fit",
+                 deschedule: Optional[DeschedulePolicy] = None,
                  on_shard_failure: str = "raise",
                  shard_timeout_s: Optional[float] = None,
                  heartbeat_s: float = 2.0,
@@ -489,7 +559,8 @@ class ShardedControlPlane:
             lifecycle=lifecycle, queue=queue,
             fold_completed=fold_completed, capture_trace=capture_trace,
             record_bindings=record_bindings, profile=profile,
-            chaos=chaos.spawn(i) if chaos is not None else None)
+            chaos=chaos.spawn(i) if chaos is not None else None,
+            placement=placement, deschedule=deschedule)
             for i in range(workers)]
 
     # -- tenancy knobs (ControlPlane API, routed by tenant hash) ----------

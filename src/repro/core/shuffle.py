@@ -49,6 +49,13 @@ chaos seed exactly replayable: chaos draws come from a separate
 sha256-spawned stream (core/chaos.py) and the scheduler RNG's
 consumption schedule never changes.
 
+Scored placement (ISSUE 8) follows the same word-stream discipline:
+``placement="scored-spread"`` / ``"scored-pack"`` change ONLY which
+node the fused cycle picks (an integer least-allocated score over the
+per-node alloc arrays), never how many words any shuffle consumes —
+so first-fit stays bit-identical to every pinned hash and a scored
+run is the same pure function of the seed on both backends.
+
 The wrapped ``random.Random`` must have no other consumers while a
 shuffler is attached (the python backend buffers words ahead; the
 native backend forks the generator state at construction and never
@@ -168,24 +175,37 @@ void ka_draw_apply(uint32_t *state, uint32_t *words, long n_words,
     *pos_io = pos;
 }
 
+/* Utilization score scale: integer fixed-point so the C kernel and
+ * the pure-Python reference agree bit-for-bit (truncating division of
+ * non-negative operands == Python //). */
+#define KA_SCORE_SCALE (1 << 20)
+
 /* One fused disordered-scheduler cycle, identical to the pure-Python
  * reference in cluster.py:
  *   1. shuffle `pod_perm` (identity-initialized here) with exactly the
  *      draws random.shuffle(pending) would consume;
  *   2. for each pod in that shuffled order: reshuffle the node `perm`
- *      (same continuous stream), then first-fit scan it against the
- *      free-capacity arrays, charging the chosen node in place so
- *      later pods of the cycle see earlier binds;
+ *      (same continuous stream), then scan it against the
+ *      free-capacity arrays — first-fit (score_mode 0) or
+ *      least-allocated scored (1 = spread: maximize post-bind free
+ *      fraction; 2 = pack: minimize it) — charging the chosen node in
+ *      place so later pods of the cycle see earlier binds;
  *   3. record the chosen node index (or -1) in bind_out[j] for the
  *      j-th pod of the SHUFFLED order (its original index is
  *      pod_perm[j]).
- * The cycle-start free maxima skip the scan (never the draws) for
- * pods that provably fit no node — the same upper-bound argument the
- * Python reference uses. */
+ * The scored modes consume the IDENTICAL draw stream as first-fit:
+ * only node selection changes, never word consumption.  Ties on the
+ * integer score go to the earliest position in the shuffled `perm`
+ * (strict comparison), keeping the choice a pure function of the
+ * draws + capacities.  The cycle-start free maxima skip the scan
+ * (never the draws) for pods that provably fit no node — the same
+ * upper-bound argument the Python reference uses. */
 void ka_schedule_cycle(uint32_t *state, uint32_t *words, long n_words,
                        long *pos_io, long n_nodes, int32_t *perm,
                        int32_t *free_cpu, int32_t *free_mem,
                        const uint8_t *ready,
+                       const int32_t *alloc_cpu, const int32_t *alloc_mem,
+                       int32_t score_mode,
                        long n_pods, int32_t *pod_perm,
                        const int32_t *pod_cpu, const int32_t *pod_mem,
                        int32_t *bind_out)
@@ -230,15 +250,37 @@ void ka_schedule_cycle(uint32_t *state, uint32_t *words, long n_words,
         int32_t cpu = pod_cpu[p], mem = pod_mem[p];
         int32_t chosen = -1;
         if (cpu <= max_cpu && mem <= max_mem) {
-            for (long s = 0; s < n_nodes; s++) {
-                int32_t idx = perm[s];
-                if (ready[idx] && free_cpu[idx] >= cpu
-                        && free_mem[idx] >= mem) {
-                    free_cpu[idx] -= cpu;
-                    free_mem[idx] -= mem;
-                    chosen = idx;
-                    break;
+            if (score_mode == 0) {
+                for (long s = 0; s < n_nodes; s++) {
+                    int32_t idx = perm[s];
+                    if (ready[idx] && free_cpu[idx] >= cpu
+                            && free_mem[idx] >= mem) {
+                        chosen = idx;
+                        break;
+                    }
                 }
+            } else {
+                int64_t best_score = 0;
+                for (long s = 0; s < n_nodes; s++) {
+                    int32_t idx = perm[s];
+                    if (!ready[idx] || free_cpu[idx] < cpu
+                            || free_mem[idx] < mem)
+                        continue;
+                    int64_t fc = (int64_t)(free_cpu[idx] - cpu);
+                    int64_t fm = (int64_t)(free_mem[idx] - mem);
+                    int64_t score = fc * KA_SCORE_SCALE / alloc_cpu[idx]
+                                    + fm * KA_SCORE_SCALE / alloc_mem[idx];
+                    if (chosen < 0
+                            || (score_mode == 1 ? score > best_score
+                                                : score < best_score)) {
+                        chosen = idx;
+                        best_score = score;
+                    }
+                }
+            }
+            if (chosen >= 0) {
+                free_cpu[chosen] -= cpu;
+                free_mem[chosen] -= mem;
             }
         }
         bind_out[j] = chosen;
@@ -294,6 +336,7 @@ def _load_native():
         cycle.argtypes = [_U32P, _U32P, ctypes.c_long, _LONGP,
                           ctypes.c_long, _I32P, _I32P, _I32P,
                           ctypes.POINTER(ctypes.c_uint8),
+                          _I32P, _I32P, ctypes.c_int32,
                           ctypes.c_long, _I32P, _I32P, _I32P, _I32P]
         _native_lib = (fill, draw, cycle)
     except Exception:
@@ -378,19 +421,24 @@ class ExactShuffler:
             apply_swaps(perm, self.draw_swaps(n))
 
     def schedule_cycle(self, perm, n_nodes: int, free_cpu, free_mem, ready,
+                       alloc_cpu, alloc_mem, score_mode: int,
                        n_pods: int, pod_perm, pod_cpu, pod_mem,
                        bind_out) -> None:
         """Fused native scatter cycle: shuffle the pending order into
         ``pod_perm`` (identity-initialized C-side), then per pod
-        reshuffle ``perm`` and first-fit scan the free arrays, charging
-        them in place; ``bind_out[j]`` gets the node index (or -1) for
-        the pod originally at index ``pod_perm[j]``.  Identical draw
-        stream and binds to ``shuffle(pending)`` + per-pod
-        ``draw_apply`` + the Python scan.  Callers must check
+        reshuffle ``perm`` and scan the free arrays — first-fit
+        (``score_mode=0``) or utilization-scored least-allocated
+        (``1`` spread / ``2`` pack, over the per-node ``alloc_*``
+        capacities) — charging them in place; ``bind_out[j]`` gets the
+        node index (or -1) for the pod originally at index
+        ``pod_perm[j]``.  Identical draw stream to ``shuffle(pending)``
+        + per-pod ``draw_apply`` in every mode, and identical binds to
+        the matching Python scan in cluster.py.  Callers must check
         :attr:`has_native_cycle`."""
         self._native_cycle(self._state, self._buf, _WORDS_PER_FETCH,
                            self._posref, n_nodes, perm, free_cpu, free_mem,
-                           ready, n_pods, pod_perm, pod_cpu, pod_mem,
+                           ready, alloc_cpu, alloc_mem, score_mode,
+                           n_pods, pod_perm, pod_cpu, pod_mem,
                            bind_out)
 
     @property

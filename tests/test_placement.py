@@ -1,0 +1,434 @@
+"""Heterogeneous node classes + scored placement + descheduler (ISSUE 8).
+
+Pins for the utilization-aware placement plane:
+
+* ``placement="first-fit"`` (the default) reproduces the PR-2 pinned
+  binding-sequence hash bit-for-bit — the scored code path must be
+  invisible unless opted into;
+* the scored modes consume the IDENTICAL shuffle word stream as
+  first-fit (only the pick among feasible nodes changes), and the
+  native fused cycle matches the pure-Python semantic reference
+  bit-for-bit across all six admission policies on mixed request
+  sizes over a heterogeneous cluster;
+* admission fast walks == generic re-sort loop under scored placement
+  for every policy preset;
+* ``kill_node``/``drain_node``/``restore_node`` write per-node
+  capacities through the native free/ready mirrors on heterogeneous
+  clusters (the uniform-capacity-assumption regression);
+* the descheduler daemon rebalances hot nodes deterministically, the
+  evicted pods requeue with no retry-budget charge, and the daemon
+  never keeps a drained sim alive;
+* scored-spread yields lower per-node time-averaged utilization
+  variance than first-fit on the same heterogeneous scenario (the CI
+  smoke gate's semantic pin).
+"""
+import hashlib
+
+import pytest
+
+from repro.configs.workflows import get_workflow_spec, wide_fanout
+from repro.core import calibration as cal
+from repro.core.chaos import ChaosSchedule
+from repro.core.dag import make_workflow
+from repro.core.descheduler import DeschedulePolicy, Descheduler
+from repro.core.runner import ControlPlane
+
+from tests.test_scale_core import PINNED, _binding_sequence
+
+POLICIES = ("fifo", "priority", "fair-share", "drf", "quota", "preempt")
+
+# mixed request sizes: cycle of (cpu_m, mem_mi) shapes covering
+# cpu-heavy, mem-heavy, small and large pods (all fit the smallest
+# node class of both presets)
+SHAPES = ((400, 300), (1200, 1200), (2400, 800), (800, 2600),
+          (3200, 3200), (600, 1800))
+
+
+def _mixed_fanout(width=12):
+    """wide_fanout with per-task heterogeneous resource requests."""
+    spec = wide_fanout(width=width)
+    for i in range(width):
+        cpu, mem = SHAPES[i % len(SHAPES)]
+        spec[f"w{i}"]["cpuNum"] = [str(cpu)]
+        spec[f"w{i}"]["memNum"] = [str(mem)]
+    return spec
+
+
+def _force_python_backend():
+    """Context values for the fallback-forcing idiom (see
+    test_informer_views.py)."""
+    import repro.core.shuffle as shuffle_mod
+    saved = (shuffle_mod._native_lib, shuffle_mod._native_tried)
+    shuffle_mod._native_lib, shuffle_mod._native_tried = None, True
+    return shuffle_mod, saved
+
+
+def _mixed_plane(policy, placement, mix="cpu-mem-skew", n_nodes=9, seed=23,
+                 **plane_kw):
+    plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                         cluster_cfg=cal.hetero_cluster(n_nodes, mix),
+                         seed=seed, usage_mode="event",
+                         placement=placement, **plane_kw)
+    fan = make_workflow("fan", _mixed_fanout(width=12))
+    mont = make_workflow("montage", get_workflow_spec("montage"))
+
+    def load(p):
+        p.add_stream(fan, repeats=2, tenant="a", arrival="concurrent",
+                     concurrency=2, priority=10, weight=3.0,
+                     quota_cpu_m=20_000)
+        p.add_stream(mont, repeats=2, tenant="b", arrival="concurrent",
+                     concurrency=2, priority=0, weight=1.0,
+                     quota_cpu_m=12_000)
+    return plane, load
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous cluster config
+# ---------------------------------------------------------------------------
+def test_hetero_cluster_nodes_and_averages():
+    for mix, classes in cal.NODE_MIXES.items():
+        cycle_len = sum(c.weight for c in classes)
+        cfg = cal.hetero_cluster(2 * cycle_len, mix)
+        nodes = cfg.nodes()
+        assert len(nodes) == 2 * cycle_len
+        # weighted per-node average equals the paper node, so hetero
+        # tiers keep total allocatable comparable to the uniform tier
+        assert sum(cpu for _, cpu, _ in nodes) == \
+            2 * cycle_len * cal.PaperCluster.node_cpu_m
+        assert sum(mem for _, _, mem in nodes) == \
+            2 * cycle_len * cal.PaperCluster.node_mem_mi
+        # every class fits the paper task
+        assert all(cpu >= cal.TASK_CPU_M and mem >= cal.TASK_MEM_MI
+                   for _, cpu, mem in nodes)
+
+
+def test_hetero_cluster_unknown_mix_rejected():
+    with pytest.raises(ValueError):
+        cal.hetero_cluster(6, "no-such-mix")
+
+
+def test_hetero_shard_slice_is_prefix():
+    """``replace(cfg, n_nodes=k)`` (the shard node-slicing idiom) must
+    see the same class assignment for its nodes as the full cluster —
+    the weighted round-robin cycle makes any slice a prefix."""
+    from dataclasses import replace
+    cfg = cal.hetero_cluster(10, "big-small")
+    full = cfg.nodes()
+    for k in (1, 3, 7):
+        assert replace(cfg, n_nodes=k).nodes() == full[:k]
+
+
+# ---------------------------------------------------------------------------
+# first-fit stays pinned; scored is opt-in and genuinely different
+# ---------------------------------------------------------------------------
+def test_unknown_placement_rejected():
+    with pytest.raises(ValueError):
+        ControlPlane("kubeadaptor", placement="best-fit")
+
+
+def test_explicit_first_fit_matches_pinned_hash():
+    """placement="first-fit" spelled out == the default == the PR-2
+    pinned binding hash (the scored path is invisible un-opted-in)."""
+    plane = ControlPlane("kubeadaptor", seed=7, placement="first-fit")
+    wf = make_workflow("montage", get_workflow_spec("montage"))
+    seq = _binding_sequence(
+        plane, lambda p: p.gateway.load([wf.with_instance(i)
+                                         for i in range(2)]))
+    digest = hashlib.sha256("\n".join(seq).encode()).hexdigest()
+    want_digest, want_n = PINNED["paper"]
+    assert (len(seq), digest) == (want_n, want_digest)
+
+
+def test_scored_differs_from_first_fit_on_hetero():
+    seqs = {}
+    for placement in ("first-fit", "scored-spread", "scored-pack"):
+        plane, load = _mixed_plane("fifo", placement)
+        seqs[placement] = _binding_sequence(plane, load)
+    assert seqs["first-fit"] != seqs["scored-spread"]
+    assert seqs["scored-spread"] != seqs["scored-pack"]
+    # same pods scheduled either way, just onto different nodes
+    assert len({len(s) for s in seqs.values()}) == 1
+
+
+def test_scored_consumes_identical_word_stream():
+    """Word-stream discipline: a scored run burns exactly the draws a
+    first-fit run burns — the seeded RNG parks on the same state."""
+    shuffle_mod, saved = _force_python_backend()
+    try:
+        states = {}
+        for placement in ("first-fit", "scored-spread", "scored-pack"):
+            plane, load = _mixed_plane("fifo", placement)
+            _binding_sequence(plane, load)
+            states[placement] = plane.cluster.rng.getstate()
+        assert states["first-fit"] == states["scored-spread"]
+        assert states["first-fit"] == states["scored-pack"]
+    finally:
+        shuffle_mod._native_lib, shuffle_mod._native_tried = saved
+
+
+# ---------------------------------------------------------------------------
+# native fused scored cycle == pure-Python reference, all six policies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+def test_scored_native_matches_python(policy):
+    import repro.core.shuffle as shuffle_mod
+    if shuffle_mod._load_native() is None:
+        pytest.skip("no native backend on this host")
+
+    def run_once():
+        plane, load = _mixed_plane(policy, "scored-spread")
+        return _binding_sequence(plane, load)
+
+    native_seq = run_once()
+    shuffle_mod, saved = _force_python_backend()
+    try:
+        python_seq = run_once()
+    finally:
+        shuffle_mod._native_lib, shuffle_mod._native_tried = saved
+    assert native_seq == python_seq
+    assert native_seq           # the scenario actually bound pods
+
+
+def test_scored_pack_native_matches_python():
+    import repro.core.shuffle as shuffle_mod
+    if shuffle_mod._load_native() is None:
+        pytest.skip("no native backend on this host")
+
+    def run_once():
+        plane, load = _mixed_plane("fair-share", "scored-pack",
+                                   mix="big-small")
+        return _binding_sequence(plane, load)
+
+    native_seq = run_once()
+    shuffle_mod, saved = _force_python_backend()
+    try:
+        python_seq = run_once()
+    finally:
+        shuffle_mod._native_lib, shuffle_mod._native_tried = saved
+    assert native_seq == python_seq
+
+
+# ---------------------------------------------------------------------------
+# admission fast walks == generic loop under scored placement
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+def test_scored_fast_walks_match_generic(policy):
+    import repro.core.resources as rs
+
+    def run(fast):
+        grants = []
+        orig_init = rs.AdmissionArbiter.__init__
+        orig_ck = rs.AdmissionArbiter._create_bookkeep
+
+        def pinit(self, *a, **k):
+            orig_init(self, *a, **k)
+            self._fast = fast
+
+        def pck(self, req):
+            grants.append((self.inf.pods.sim.now(), req.namespace,
+                           req.task.id))
+            return orig_ck(self, req)
+
+        rs.AdmissionArbiter.__init__ = pinit
+        rs.AdmissionArbiter._create_bookkeep = pck
+        try:
+            plane, load = _mixed_plane(policy, "scored-spread")
+            seq = _binding_sequence(plane, load)
+            return (grants, seq, plane.arbiter.deferrals,
+                    plane.arbiter.admitted)
+        finally:
+            rs.AdmissionArbiter.__init__ = orig_init
+            rs.AdmissionArbiter._create_bookkeep = orig_ck
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# satellite: heterogeneous kill/drain/restore through the native mirrors
+# ---------------------------------------------------------------------------
+def _chaos_hetero_plane():
+    # scripted chaos: kill a big node, drain a small one, restore both
+    chaos = ChaosSchedule(seed=5, events=(
+        (8.0, "kill", "node1"),       # big (16000m) under big-small
+        (12.0, "drain", "node2"),     # small (4000m)
+        (25.0, "restore", "node1"),
+        (30.0, "restore", "node2"),
+    ))
+    plane = ControlPlane("kubeadaptor", admission_policy="preempt",
+                         cluster_cfg=cal.hetero_cluster(6, "big-small"),
+                         seed=13, usage_mode="event",
+                         placement="scored-spread", chaos=chaos)
+    fan = make_workflow("fan", _mixed_fanout(width=10))
+
+    def load(p):
+        p.add_stream(fan, repeats=4, tenant="a", arrival="concurrent",
+                     concurrency=2)
+    return plane, load
+
+
+def test_hetero_kill_drain_restore_mirrors():
+    """After killing/draining and restoring heterogeneous nodes, every
+    native mirror slot must hold that node's OWN capacity — a uniform
+    -capacity assumption anywhere in kill/drain/restore would corrupt
+    the 16000m slot with an 8000m write."""
+    plane, load = _chaos_hetero_plane()
+    cluster = plane.cluster
+    if cluster._c_free_cpu is None:
+        pytest.skip("no native backend on this host")
+    load(plane)
+    plane.run(horizon_s=100_000)
+    assert plane.chaos.node_kills == 1
+    assert plane.chaos.node_drains == 1
+    assert plane.chaos.node_restores == 2
+    for i, node in enumerate(cluster._node_seq):
+        # per-node allocs survived the round trip...
+        assert cluster._c_alloc_cpu[i] == node.cpu_alloc
+        assert cluster._c_alloc_mem[i] == node.mem_alloc
+        # ...and the free mirrors re-anchored to each node's own state
+        assert cluster._c_free_cpu[i] == node.cpu_alloc - node.cpu_used
+        assert cluster._c_free_mem[i] == node.mem_alloc - node.mem_used
+        assert cluster._c_ready[i] == node.ready
+        assert node.ready           # both casualties were restored
+    # the big and small nodes really have different capacities
+    caps = {n.cpu_alloc for n in cluster._node_seq}
+    assert caps == {16000, 4000}
+
+
+def test_hetero_chaos_native_matches_python():
+    import repro.core.shuffle as shuffle_mod
+    if shuffle_mod._load_native() is None:
+        pytest.skip("no native backend on this host")
+
+    def run_once():
+        plane, load = _chaos_hetero_plane()
+        return _binding_sequence(plane, load)
+
+    native_seq = run_once()
+    shuffle_mod, saved = _force_python_backend()
+    try:
+        python_seq = run_once()
+    finally:
+        shuffle_mod._native_lib, shuffle_mod._native_tried = saved
+    assert native_seq == python_seq
+
+
+# ---------------------------------------------------------------------------
+# descheduler
+# ---------------------------------------------------------------------------
+def _descheduler_run():
+    plane = ControlPlane("kubeadaptor", admission_policy="fifo",
+                         cluster_cfg=cal.hetero_cluster(8, "big-small"),
+                         seed=5, usage_mode="event",
+                         placement="first-fit",
+                         deschedule=DeschedulePolicy(
+                             interval_s=3.0, util_threshold=0.35,
+                             max_evict_per_node=2))
+    fan = make_workflow("fan", wide_fanout(width=6))
+    plane.add_stream(fan, repeats=6, tenant="a", arrival="concurrent",
+                     concurrency=3)
+    return plane, plane.run(horizon_s=100_000)
+
+
+def test_descheduler_rebalances_without_retry_charge():
+    plane, res = _descheduler_run()
+    m = res.metrics
+    done = sum(1 for r in m.workflows.values()
+               if r.ns_deleted > 0 and not r.failed)
+    assert done == 6                       # rebalancing never loses work
+    assert res.descheduler.evictions > 0   # the daemon genuinely fired
+    assert res.cluster.rebalances == res.descheduler.evictions
+    # no retry-budget charge: evictions ride the requeue machinery
+    assert sum(r.retries for r in m.workflows.values()) == 0
+    ts = m.tenant_summary()["a"]
+    assert ts["rebalanced"] == res.cluster.rebalances
+    rec = m.export_partial().recovery_summary()
+    assert rec["rebalanced"] == res.cluster.rebalances
+    # the daemon is pure observation+eviction: it must not keep the
+    # drained sim alive (the run ended long before the horizon)
+    assert res.sim.last_event_t < 100_000
+
+
+def test_descheduler_deterministic_replay():
+    def fingerprint():
+        plane, res = _descheduler_run()
+        return (res.descheduler.counters(), res.cluster.rebalances,
+                res.sim.last_event_t, res.sim.events_processed)
+    assert fingerprint() == fingerprint()
+
+
+def test_descheduler_draws_nothing():
+    """The daemon must not touch the scheduler RNG stream: same run
+    with and without the descheduler parks the RNG identically."""
+    shuffle_mod, saved = _force_python_backend()
+    try:
+        states = []
+        for deschedule in (None, DeschedulePolicy(interval_s=3.0,
+                                                  util_threshold=0.35)):
+            plane = ControlPlane(
+                "kubeadaptor", admission_policy="fifo",
+                cluster_cfg=cal.hetero_cluster(6, "big-small"),
+                seed=9, usage_mode="event", deschedule=deschedule)
+            fan = make_workflow("fan", wide_fanout(width=6))
+            plane.add_stream(fan, repeats=2, tenant="a",
+                             arrival="concurrent", concurrency=2)
+            plane.run(horizon_s=100_000)
+            states.append(plane.cluster.rng.getstate())
+        assert states[0] == states[1]
+    finally:
+        shuffle_mod._native_lib, shuffle_mod._native_tried = saved
+
+
+def test_descheduler_validation():
+    from repro.core.sim import Sim
+    with pytest.raises(ValueError):
+        Descheduler(Sim(), None, DeschedulePolicy(interval_s=0.0))
+    with pytest.raises(ValueError):
+        Descheduler(Sim(), None, DeschedulePolicy(util_threshold=0.0))
+
+
+# ---------------------------------------------------------------------------
+# hotspot spread: the CI gate's semantic pin
+# ---------------------------------------------------------------------------
+def _hotspot_variance(placement):
+    plane, load = _mixed_plane("fifo", placement, mix="big-small",
+                               n_nodes=12, seed=42)
+    load(plane)
+    plane.run(horizon_s=200_000)
+    return plane.cluster.hotspot_summary()
+
+
+def test_scored_spread_reduces_util_variance():
+    ff = _hotspot_variance("first-fit")
+    sp = _hotspot_variance("scored-spread")
+    assert sp["util_variance"] <= ff["util_variance"]
+    assert sp["nodes"] == ff["nodes"] == 12.0
+    # averages are genuine time means, bounded like utilizations
+    for h in (ff, sp):
+        assert 0.0 <= h["min_mean_util"] <= h["mean_util"] \
+            <= h["max_mean_util"] <= 1.0
+
+
+def test_hotspot_summary_sharded_merge():
+    """The pooled-population merge over disjoint shard node slices is
+    exact: same identities as one flat population."""
+    from repro.core.shard import ShardedControlPlane
+    plane = ShardedControlPlane(
+        2, admission_policy="fifo",
+        cluster_cfg=cal.hetero_cluster(8, "big-small"), seed=31,
+        usage_mode="event", processes=False, fold_completed=True,
+        capture_trace=False, placement="scored-spread")
+    fan = make_workflow("fan", wide_fanout(width=8))
+    for t in ("a", "b", "c", "d"):
+        plane.add_stream(fan, repeats=2, tenant=t, arrival="concurrent",
+                         concurrency=2)
+    res = plane.run(horizon_s=200_000)
+    merged = res.hotspot_summary()
+    assert merged["nodes"] == 8
+    # recompute from the raw shard rows: pooled mean must equal the
+    # weighted mean and the variance identity must hold exactly
+    per = [s["node_hotspot"] for s in res.shards]
+    want_mean = sum(h["nodes"] * h["mean_util"] for h in per) / 8
+    assert merged["mean_util"] == pytest.approx(want_mean, rel=1e-12)
+    assert merged["max_mean_util"] == max(h["max_mean_util"] for h in per)
+    assert merged["util_variance"] >= 0.0
+    assert res.completed_workflows == 8
