@@ -32,7 +32,12 @@ Usage:
         [--chaos-seed 0] [--require-complete] [--append] \
         [--placement first-fit|scored-spread|scored-pack] \
         [--node-mix uniform|big-small|cpu-mem-skew] \
-        [--deschedule-interval 0] [--deschedule-threshold 0.9]
+        [--deschedule-interval 0] [--deschedule-threshold 0.9] \
+        [--deschedule-victim youngest|largest-request] \
+        [--autoscale-interval 0] [--autoscale-pending-threshold 1] \
+        [--autoscale-sustain 30] [--autoscale-idle 60] \
+        [--autoscale-min-frac 0.25] [--autoscale-scale-step 1] \
+        [--autoscale-start-after 0]
 
 ``--budget-s`` exits 2 when total wall time exceeds the budget;
 ``--min-events-per-sec`` / ``--max-events-per-pod`` /
@@ -122,6 +127,27 @@ first-fit and scored-spread is the tier's headline), ``rebalances``,
 ``node_classes``.  ``--append`` refuses (exit 2) to merge tiers into
 a report written under a different schema version.
 
+Elastic autoscaling tier (ISSUE 9): ``--autoscale-interval`` arms the
+deterministic node-pool autoscaler (repro.core.autoscaler) on every
+policy run — the full roster is materialized (fixed native-mirror
+indices) but each node class starts at a ``--autoscale-min-frac``
+floor, scales up by ``--autoscale-scale-step`` nodes per tick while
+pending depth stays >= ``--autoscale-pending-threshold`` for
+``--autoscale-sustain`` seconds, and drains nodes idle for
+``--autoscale-idle`` seconds back down when the queues are empty.
+The daemon draws zero RNG words, so runs without the flags stay
+bit-identical to ``bench_scale/v6`` behavior.  v7 rows always add
+``"cost"`` (``Cluster.cost_summary``: provisioned node/cpu/mem
+seconds, time-weighted utilization over *provisioned* capacity, and
+provisioning peak/low/flips — flat provisioning on fixed rosters, so
+fixed-vs-autoscaled comparisons read straight off the report), plus
+``"autoscaler"`` counters when the daemon was armed; autoscaled
+scenarios echo the knobs under ``scenario["autoscale"]`` and
+descheduler scenarios gain the ``victim`` eviction-order echo
+(``--deschedule-victim``).  Sharded runs slice explicit pool bounds
+across shards and merge cost exactly (areas/flips sum, ratios
+recomputed from pooled areas).
+
 The script still runs against the pre-optimization core (counters it
 introduced are read via getattr) so speedups can be measured by
 checking out two revisions and comparing ``wall_s``.
@@ -155,11 +181,11 @@ BATCH_DEADLINE_S = 3600.0
 # (sum over the 8 streams = 120%, so caps genuinely bind under load)
 PROD_QUOTA_FRAC = 0.20
 BATCH_QUOTA_FRAC = 0.10
-SCHEMA = "bench_scale/v6"
+SCHEMA = "bench_scale/v7"
 
 
 def _plane_kwargs(usage_mode, queue, lifecycle, placement="first-fit",
-                  deschedule=None):
+                  deschedule=None, autoscale=None):
     """Knobs that only the optimized core understands."""
     params = inspect.signature(ControlPlane.__init__).parameters
     kw = {}
@@ -177,6 +203,8 @@ def _plane_kwargs(usage_mode, queue, lifecycle, placement="first-fit",
         kw["placement"] = placement
     if "deschedule" in params and deschedule is not None:
         kw["deschedule"] = deschedule
+    if "autoscale" in params and autoscale is not None:
+        kw["autoscale"] = autoscale
     return kw
 
 
@@ -192,7 +220,7 @@ def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
                 queue=None, lifecycle=None, trace=None, workers=1,
                 shard_procs=None, processes=True, profile=False,
                 chaos=None, placement="first-fit", node_mix="uniform",
-                deschedule=None):
+                deschedule=None, autoscale=None):
     cfg = _cluster_cfg(n_nodes, node_mix)
     if workers > 1:
         from repro.core.shard import ShardedControlPlane
@@ -202,13 +230,14 @@ def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
             fold_completed=True, capture_trace=False,
             shard_procs=shard_procs, processes=processes, profile=profile,
             chaos=chaos, **_plane_kwargs(usage_mode, queue, lifecycle,
-                                         placement, deschedule))
+                                         placement, deschedule, autoscale))
     else:
         plane = ControlPlane("kubeadaptor", admission_policy=policy,
                              cluster_cfg=cfg,
                              seed=seed, chaos=chaos,
                              **_plane_kwargs(usage_mode, queue, lifecycle,
-                                             placement, deschedule))
+                                             placement, deschedule,
+                                             autoscale))
     if trace is not None:
         plane.add_trace(trace.get("arrivals", []),
                         tenants=trace.get("tenants"))
@@ -266,19 +295,20 @@ def _add_stream_accepts(name):
 def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
                usage_mode="event", queue=None, lifecycle=None, trace=None,
                profile=False, workers=1, shard_procs=None, chaos=None,
-               placement="first-fit", node_mix="uniform", deschedule=None):
+               placement="first-fit", node_mix="uniform", deschedule=None,
+               autoscale=None):
     if workers > 1:
         return _run_policy_sharded(
             policy, n_workflows, n_nodes, seed, horizon_s=horizon_s,
             usage_mode=usage_mode, queue=queue, lifecycle=lifecycle,
             trace=trace, profile=profile, workers=workers,
             shard_procs=shard_procs, chaos=chaos, placement=placement,
-            node_mix=node_mix, deschedule=deschedule)
+            node_mix=node_mix, deschedule=deschedule, autoscale=autoscale)
     plane = build_plane(policy, n_workflows, n_nodes, seed,
                         usage_mode=usage_mode, queue=queue,
                         lifecycle=lifecycle, trace=trace, chaos=chaos,
                         placement=placement, node_mix=node_mix,
-                        deschedule=deschedule)
+                        deschedule=deschedule, autoscale=autoscale)
     try:
         import repro.core.cluster as _cluster_mod
         copies0 = _cluster_mod.SNAPSHOTS_MADE
@@ -398,6 +428,16 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
     desched = getattr(res, "descheduler", None)
     if desched is not None:
         rec["descheduler"] = desched.counters()
+    # cost accounting (ISSUE 9): always emitted — fixed rosters report
+    # flat provisioning, so cost-vs-makespan comparisons between fixed
+    # and autoscaled rows read straight off the report
+    cost = getattr(res.cluster, "cost_summary", None)
+    if cost is not None:
+        rec["cost"] = {k: (round(v, 4) if isinstance(v, float) else v)
+                       for k, v in cost().items()}
+    autoscaler = getattr(res, "autoscaler", None)
+    if autoscaler is not None:
+        rec["autoscaler"] = autoscaler.counters()
     # chaos/recovery observables (ISSUE 7): only emitted when a chaos
     # schedule was armed — chaos-free rows keep the exact v4 key set
     chaos_inj = getattr(res, "chaos", None)
@@ -414,7 +454,7 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
                         lifecycle=None, trace=None, profile=False,
                         workers=2, shard_procs=None, chaos=None,
                         placement="first-fit", node_mix="uniform",
-                        deschedule=None):
+                        deschedule=None, autoscale=None):
     """One policy run through the tenant-partitioned control plane
     (repro.core.shard): same row schema as the unsharded path plus
     ``workers`` / ``shards[]`` / fork-proof RSS totals."""
@@ -425,7 +465,7 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
                         lifecycle=lifecycle, trace=trace, workers=workers,
                         shard_procs=shard_procs, profile=profile,
                         chaos=chaos, placement=placement, node_mix=node_mix,
-                        deschedule=deschedule)
+                        deschedule=deschedule, autoscale=autoscale)
     t0 = time.perf_counter()
     res = plane.run(horizon_s=horizon_s)
     wall = time.perf_counter() - t0
@@ -539,6 +579,15 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
     desched_counters = res.descheduler_counters()
     if desched_counters:
         rec["descheduler"] = desched_counters
+    # cost accounting (ISSUE 9): exact pooled merge over the disjoint
+    # shard slices (areas/flips sum; ratios recomputed from the sums)
+    cost = res.cost_summary()
+    if cost:
+        rec["cost"] = {k: (round(v, 4) if isinstance(v, float) else v)
+                       for k, v in cost.items()}
+    autoscaler_counters = res.autoscaler_counters()
+    if autoscaler_counters:
+        rec["autoscaler"] = autoscaler_counters
     # chaos/recovery observables (ISSUE 7): per-shard counters summed
     # by ShardedRunResult.chaos_counters; recovery merges exactly
     # across shards (node_lost/preempted are sums, resched percentiles
@@ -557,13 +606,14 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
 def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
                  queue=None, lifecycle=None, trace=None, trace_path=None,
                  profile=False, workers=1, shard_procs=None, chaos=None,
-                 placement="first-fit", node_mix="uniform", deschedule=None):
+                 placement="first-fit", node_mix="uniform", deschedule=None,
+                 autoscale=None):
     runs = [run_policy(p, n_workflows, n_nodes, seed, usage_mode=usage_mode,
                        queue=queue, lifecycle=lifecycle, trace=trace,
                        profile=profile, workers=workers,
                        shard_procs=shard_procs, chaos=chaos,
                        placement=placement, node_mix=node_mix,
-                       deschedule=deschedule)
+                       deschedule=deschedule, autoscale=autoscale)
             for p in policies]
     scenario = {"workflows": n_workflows, "nodes": n_nodes,
                 "node_cpu_m": cal.PaperCluster.node_cpu_m,
@@ -582,7 +632,17 @@ def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
         scenario["deschedule"] = {
             "interval_s": deschedule.interval_s,
             "util_threshold": deschedule.util_threshold,
-            "max_evict_per_node": deschedule.max_evict_per_node}
+            "max_evict_per_node": deschedule.max_evict_per_node,
+            "victim": getattr(deschedule, "victim", "youngest")}
+    if autoscale is not None:
+        scenario["autoscale"] = {
+            "interval_s": autoscale.interval_s,
+            "pending_threshold": autoscale.pending_threshold,
+            "sustain_s": autoscale.sustain_s,
+            "idle_s": autoscale.idle_s,
+            "min_frac": autoscale.min_frac,
+            "scale_step": autoscale.scale_step,
+            "start_after_s": autoscale.start_after_s}
     if workers > 1:
         scenario["workers"] = workers
     if chaos is not None:
@@ -726,6 +786,32 @@ def main():
                     help="node utilization fraction above which the "
                          "descheduler evicts (requeued pods are not "
                          "charged retry budget)")
+    ap.add_argument("--deschedule-victim", default="youngest",
+                    choices=("youngest", "largest-request"),
+                    help="eviction order on a hot node: youngest "
+                         "(least sunk work) or largest-request "
+                         "(most utilization relief per eviction)")
+    ap.add_argument("--autoscale-interval", type=float, default=0.0,
+                    help="autoscaler daemon period in sim seconds "
+                         "(0 = daemon off: full roster, bit-identical "
+                         "to v6 behavior)")
+    ap.add_argument("--autoscale-pending-threshold", type=int, default=1,
+                    help="pending depth (admission queue + unbound "
+                         "pods) that counts as scale-up pressure")
+    ap.add_argument("--autoscale-sustain", type=float, default=30.0,
+                    help="seconds the pending depth must stay above "
+                         "the threshold before the first scale-up")
+    ap.add_argument("--autoscale-idle", type=float, default=60.0,
+                    help="seconds a node must hold zero bound pods "
+                         "before idle scale-down drains it")
+    ap.add_argument("--autoscale-min-frac", type=float, default=0.25,
+                    help="per-node-class provisioned floor as a "
+                         "fraction of the class population")
+    ap.add_argument("--autoscale-scale-step", type=int, default=1,
+                    help="nodes provisioned per sustained-pressure tick")
+    ap.add_argument("--autoscale-start-after", type=float, default=0.0,
+                    help="sim seconds of calm before the first "
+                         "autoscaler tick")
     args = ap.parse_args()
 
     policies = [p for p in args.policies.split(",") if p]
@@ -750,7 +836,19 @@ def main():
         from repro.core.descheduler import DeschedulePolicy
         deschedule = DeschedulePolicy(
             interval_s=args.deschedule_interval,
-            util_threshold=args.deschedule_threshold)
+            util_threshold=args.deschedule_threshold,
+            victim=args.deschedule_victim)
+    autoscale = None
+    if args.autoscale_interval > 0.0:
+        from repro.core.autoscaler import AutoscalePolicy
+        autoscale = AutoscalePolicy(
+            interval_s=args.autoscale_interval,
+            pending_threshold=args.autoscale_pending_threshold,
+            sustain_s=args.autoscale_sustain,
+            idle_s=args.autoscale_idle,
+            min_frac=args.autoscale_min_frac,
+            scale_step=args.autoscale_scale_step,
+            start_after_s=args.autoscale_start_after)
     tiers = []
     for n_wf, n_nodes, n_workers in _parse_tiers(args):
         tier = run_scenario(n_wf, n_nodes, args.seed, policies,
@@ -761,7 +859,8 @@ def main():
                             profile=args.profile, workers=n_workers,
                             shard_procs=args.shard_procs or None,
                             chaos=chaos, placement=args.placement,
-                            node_mix=args.node_mix, deschedule=deschedule)
+                            node_mix=args.node_mix, deschedule=deschedule,
+                            autoscale=autoscale)
         tiers.append(tier)
         n_wf = tier["scenario"]["workflows"]
         shard_tag = f"/{n_workers}w" if n_workers > 1 else ""

@@ -154,6 +154,19 @@ def hetero_cluster(n_nodes: int, mix: str = "big-small") -> HeteroCluster:
     return HeteroCluster(n_nodes=n_nodes, classes=NODE_MIXES[mix])
 
 
+def node_class_names(cfg) -> Tuple[str, ...]:
+    """Per-node class name for any cluster config, in roster order:
+    hetero configs follow the weighted round-robin ``class_cycle``
+    (so any prefix slice — the shard partition — keeps consistent
+    labels), uniform configs collapse to a single ``"node"`` class.
+    The autoscaler's derived node pools group the roster by these."""
+    n = cfg.n_nodes
+    if hasattr(cfg, "class_cycle"):
+        cycle = cfg.class_cycle()
+        return tuple(cycle[i % len(cycle)].name for i in range(n))
+    return ("node",) * n
+
+
 # Paper workload: stress -c 1 -m 100 -t 5 -> CPU+mem busy ~10s total,
 # requests = limits = 1200m / 1200Mi.
 TASK_DURATION_S = 10.0

@@ -48,6 +48,14 @@ killing a 16-core node removes 16 cores, restoring it returns 16
 (pinned by tests/test_placement.py's hetero drain/restore
 regression).  The descheduler (core/descheduler.py) composes the same
 way: it draws nothing, so chaos replay identity is unaffected.
+
+The autoscaler (core/autoscaler.py, ISSUE 9) also draws nothing, but
+it shrinks the provisioned roster: victims are picked only among
+PROVISIONED ready nodes (never the last one), and a chaos rejoin of a
+node the autoscaler deprovisioned while it was down is a no-op — only
+``provision_node`` brings reclaimed capacity back.  With no autoscaler
+every node stays provisioned, so the candidate lists and the draw
+stream are bit-identical to the PR-7/PR-8 pins.
 """
 from __future__ import annotations
 
@@ -169,10 +177,15 @@ class ChaosInjector:
 
     def _pick_victim(self) -> Optional[str]:
         # canonical node order (the cluster's _node_seq) so the draw is
-        # identical across queue backends and shuffle backends
-        ready = [n.name for n in self.cluster._node_seq if n.ready]
+        # identical across queue backends and shuffle backends; only
+        # PROVISIONED ready nodes are candidates — chaos must not kill
+        # capacity the autoscaler has already reclaimed, and without an
+        # autoscaler every node is provisioned so the candidate list
+        # (and therefore the draw stream) is unchanged
+        ready = [n.name for n in self.cluster._node_seq
+                 if n.ready and n.provisioned]
         if len(ready) <= 1:
-            return None                  # never take the last node down
+            return None        # never take the last provisioned node down
         return ready[self.rng.randrange(len(ready))]
 
     def _node_event(self, action: str, node: str):
@@ -192,6 +205,11 @@ class ChaosInjector:
     def _restore(self, node: str):
         since = self._down_since.pop(node, None)
         if since is None or self.cluster.nodes[node].ready:
+            return
+        if not self.cluster.nodes[node].provisioned:
+            # the autoscaler deprovisioned this node while it was down;
+            # a chaos rejoin must not resurrect reclaimed capacity
+            # (restore_node has the same guard — don't count a restore)
             return
         self.node_downtime_s += self.sim.now() - since
         self.node_restores += 1

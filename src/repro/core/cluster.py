@@ -82,6 +82,21 @@ included); ``node_peak_util``/``hotspot_summary()`` track per-node
 bind-time high-water marks, and ``rebalance_evict`` is the periodic
 descheduler's offload primitive (``rebalanced=True`` pods requeue
 through admission with no retry-budget charge).
+
+Elastic provisioning (ISSUE 9): every node carries a ``provisioned``
+bit orthogonal to ``ready``.  The full max roster is materialized at
+construction (fixed native-mirror indices), and the autoscaler
+(core/autoscaler.py) flips membership with
+:meth:`provision_node`/:meth:`deprovision_node` — restore_node-style
+ready/free-array writes on the way up, the ``drain_node`` eviction
+path on the way down.  A node deprovisioned while chaos holds it down
+is NOT resurrected by ``restore_node`` (the autoscaler owns it until
+re-provisioned).  The cluster keeps O(1) provisioned-capacity area
+integrals (node-, mcore- and MiB-seconds plus in-use areas, windowed
+to ``last_event_t`` exactly like the per-node utilization integrals)
+so :meth:`cost_summary` reports the cost axis — node-seconds and
+time-weighted utilization over *provisioned* time — mergeable across
+shards by plain summation.
 """
 from __future__ import annotations
 
@@ -158,6 +173,7 @@ class NodeObj(_FastCopy):
     cpu_used: int = 0
     mem_used: int = 0
     ready: bool = True
+    provisioned: bool = True          # autoscaler pool membership (ISSUE 9)
     slow_factor: float = 1.0          # straggler injection for tests
 
     def fits(self, cpu: int, mem: int) -> bool:
@@ -335,6 +351,23 @@ class Cluster:
         self._util_area: Dict[str, float] = {name: 0.0 for name in self.nodes}
         self._util_cur: Dict[str, float] = {name: 0.0 for name in self.nodes}
         self._util_mark: Dict[str, float] = {name: 0.0 for name in self.nodes}
+        # provisioned-capacity cost accounting (ISSUE 9): O(1) area
+        # integrals over the provisioned roster (node/cpu/mem seconds)
+        # and the in-use totals, windowed to last_event_t by
+        # cost_summary() exactly like the per-node utilization areas.
+        # The full roster starts provisioned; the autoscaler shrinks it
+        self._prov_nodes = len(self._node_seq)
+        self._prov_cpu = sum(n.cpu_alloc for n in self._node_seq)
+        self._prov_mem = sum(n.mem_alloc for n in self._node_seq)
+        self._prov_mark = 0.0
+        self._prov_node_area = 0.0
+        self._prov_cpu_area = 0.0
+        self._prov_mem_area = 0.0
+        self._prov_peak = self._prov_low = self._prov_nodes
+        self._use_mark = 0.0
+        self._use_cpu_area = 0.0
+        self._use_mem_area = 0.0
+        self.provision_flips = 0             # provision+deprovision events
         # fault injection (chaos plane, ISSUE 7): ChaosInjector attaches
         # itself here; None = zero draws, bit-identical behavior
         self.chaos = None
@@ -598,6 +631,11 @@ class Cluster:
                 self._util_cur[name] * (now - self._util_mark[name])
             self._util_mark[name] = now
             self._util_cur[name] = fc if fc >= fm else fm
+            dt = now - self._use_mark
+            if dt > 0.0:
+                self._use_cpu_area += self.cpu_in_use * dt
+                self._use_mem_area += self.mem_in_use * dt
+                self._use_mark = now
             self.cpu_in_use -= pod.cpu_m
             self.mem_in_use -= pod.mem_mi
             tenant = pod.tenant
@@ -742,6 +780,11 @@ class Cluster:
             self._util_cur[name] * (pod.scheduled - self._util_mark[name])
         self._util_mark[name] = pod.scheduled
         self._util_cur[name] = frac
+        dt = pod.scheduled - self._use_mark
+        if dt > 0.0:
+            self._use_cpu_area += self.cpu_in_use * dt
+            self._use_mem_area += self.mem_in_use * dt
+            self._use_mark = pod.scheduled
         self.cpu_in_use += pod.cpu_m
         self.mem_in_use += pod.mem_mi
         tenant = pod.tenant
@@ -999,9 +1042,20 @@ class Cluster:
 
     def restore_node(self, name: str):
         node = self.nodes[name]
+        if not node.provisioned:
+            # the autoscaler deprovisioned this node while it was down:
+            # a late chaos rejoin must not resurrect it — only
+            # provision_node (which re-enters here) brings it back
+            return
         node.ready = True
         node._rv += 1
         if node.cpu_used or node.mem_used:   # normally zero: failure released
+            now = self.sim.now()
+            dt = now - self._use_mark
+            if dt > 0.0:
+                self._use_cpu_area += self.cpu_in_use * dt
+                self._use_mem_area += self.mem_in_use * dt
+                self._use_mark = now
             self.cpu_in_use -= node.cpu_used
             self.mem_in_use -= node.mem_used
             if self.on_usage_change is not None:
@@ -1014,6 +1068,97 @@ class Cluster:
             self._c_ready[i] = 1
         self._notify("node", MODIFIED, node)
         self._kick_scheduler()
+
+    # ---- elastic provisioning (autoscaler substrate) ----------------------
+    def _accrue_provisioned(self):
+        """Advance the provisioned-capacity area integrals to now.
+        O(1): the roster totals are maintained incrementally by the
+        provision/deprovision flips, so the integral only needs the
+        elapsed span times the current totals."""
+        now = self.sim.now()
+        dt = now - self._prov_mark
+        if dt > 0.0:
+            self._prov_node_area += self._prov_nodes * dt
+            self._prov_cpu_area += self._prov_cpu * dt
+            self._prov_mem_area += self._prov_mem * dt
+            self._prov_mark = now
+
+    def provision_node(self, name: str):
+        """Autoscaler scale-up: bring a deprovisioned node back into
+        the roster.  Accrues the cost integrals at the old capacity,
+        flips the provisioned bit, then rejoins the scheduler through
+        the ordinary :meth:`restore_node` path (ready-array writes,
+        node MODIFIED fan-out, scheduler kick) — the native mirrors
+        keep their fixed indices because the node object never left
+        ``_node_seq``."""
+        node = self.nodes[name]
+        if node.provisioned:
+            return
+        self._accrue_provisioned()
+        node.provisioned = True
+        node._rv += 1
+        self._prov_nodes += 1
+        self._prov_cpu += node.cpu_alloc
+        self._prov_mem += node.mem_alloc
+        if self._prov_nodes > self._prov_peak:
+            self._prov_peak = self._prov_nodes
+        self.provision_flips += 1
+        self.restore_node(name)
+
+    def deprovision_node(self, name: str) -> int:
+        """Autoscaler scale-down: cordon + drain the node through the
+        PR-7 reclaim path (residents requeue with no retry-budget
+        charge), then remove its capacity from the provisioned
+        roster.  While deprovisioned the node is invisible to chaos
+        victim picks and immune to late ``restore_node`` rejoins.
+        Returns the number of pods disrupted (zero when the caller
+        only drains idle nodes)."""
+        node = self.nodes[name]
+        if not node.provisioned:
+            return 0
+        lost = self.drain_node(name) if node.ready else 0
+        self._accrue_provisioned()
+        node.provisioned = False
+        node._rv += 1
+        self._prov_nodes -= 1
+        self._prov_cpu -= node.cpu_alloc
+        self._prov_mem -= node.mem_alloc
+        if self._prov_nodes < self._prov_low:
+            self._prov_low = self._prov_nodes
+        self.provision_flips += 1
+        return lost
+
+    def cost_summary(self) -> Dict[str, float]:
+        """Provisioned-capacity cost axes: node/cpu/mem-seconds paid
+        and the time-weighted utilization of that paid capacity.
+        Windowed to ``last_event_t`` like :meth:`hotspot_summary`
+        (drained sims park the clock at the horizon).  Every field is
+        a plain sum/extremum over the run, so sharded planes merge it
+        exactly: areas and flips add, peaks/lows take max/min, and
+        the ratios are recomputed from the pooled areas."""
+        now = min(self.sim.now(),
+                  getattr(self.sim, "last_event_t", self.sim.now()))
+        span = max(0.0, now - self._prov_mark)
+        node_s = self._prov_node_area + self._prov_nodes * span
+        cpu_s = self._prov_cpu_area + self._prov_cpu * span
+        mem_s = self._prov_mem_area + self._prov_mem * span
+        use_span = max(0.0, now - self._use_mark)
+        used_cpu_s = self._use_cpu_area + self.cpu_in_use * use_span
+        used_mem_s = self._use_mem_area + self.mem_in_use * use_span
+        return {
+            "node_seconds": node_s,
+            "cpu_mcore_seconds": cpu_s,
+            "mem_mib_seconds": mem_s,
+            "used_cpu_mcore_seconds": used_cpu_s,
+            "used_mem_mib_seconds": used_mem_s,
+            "cpu_util_over_provisioned": (
+                used_cpu_s / cpu_s if cpu_s > 0 else 0.0),
+            "mem_util_over_provisioned": (
+                used_mem_s / mem_s if mem_s > 0 else 0.0),
+            "provisioned_peak_nodes": float(self._prov_peak),
+            "provisioned_low_nodes": float(self._prov_low),
+            "provision_flips": float(self.provision_flips),
+        }
 
     # ---- reads (each list is an apiserver round-trip — the pressure the
     # Informer cache avoids; watch-driven callers never come here) ----------

@@ -18,9 +18,11 @@ with NO retry-budget charge, and recovery metrics count the offload
 separately (``WorkflowRecord.rebalanced``).
 
 Determinism: everything is a pure function of cluster state — nodes
-are visited in the canonical ``_node_seq`` order, the youngest
-RUNNING resident (latest ``started``, pod name as tie-break) is
-evicted first (least sunk work), and NO random draw is ever consumed,
+are visited in the canonical ``_node_seq`` order, victims on a hot
+node follow the declared ``victim`` policy (``"youngest"``: latest
+``started``, least sunk work; ``"largest-request"``: biggest cpu/mem
+ask, most relief per eviction; pod name tie-breaks both), and NO
+random draw is ever consumed,
 so arming a descheduler does not move the scheduler RNG word stream
 and a fixed seed replays exactly.  Thrash guard: a pod is only
 offloaded when some OTHER ready node below the threshold could fit
@@ -36,6 +38,9 @@ from repro.core.cluster import RUNNING, Cluster
 from repro.core.sim import Sim
 
 
+VICTIM_POLICIES = ("youngest", "largest-request")
+
+
 @dataclass(frozen=True)
 class DeschedulePolicy:
     """Picklable descheduler knobs (frozen: shareable across shards)."""
@@ -43,6 +48,10 @@ class DeschedulePolicy:
     util_threshold: float = 0.90       # node is "hot" at >= this
     max_evict_per_node: int = 1        # offloads per hot node per tick
     start_after_s: float = 0.0         # calm period before the first tick
+    victim: str = "youngest"           # eviction order on a hot node:
+                                       # "youngest" = least sunk work,
+                                       # "largest-request" = biggest
+                                       # utilization relief per eviction
 
 
 class Descheduler:
@@ -53,6 +62,9 @@ class Descheduler:
             raise ValueError("interval_s must be positive")
         if not (0.0 < policy.util_threshold <= 1.0):
             raise ValueError("util_threshold must be in (0, 1]")
+        if policy.victim not in VICTIM_POLICIES:
+            raise ValueError(f"unknown victim policy {policy.victim!r}; "
+                             f"expected one of {VICTIM_POLICIES}")
         self.sim = sim
         self.cluster = cluster
         self.policy = policy
@@ -84,12 +96,19 @@ class Descheduler:
 
     def _offload(self, node, cool):
         """Evict up to ``max_evict_per_node`` RUNNING residents of one
-        hot node, youngest first, each gated on a cooler node that
-        fits it (thrash guard)."""
+        hot node, ordered by the victim policy (youngest = latest
+        ``started``, least sunk work; largest-request = biggest
+        cpu/mem ask, most relief per eviction; pod name tie-breaks
+        both), each gated on a cooler node that fits it (thrash
+        guard)."""
+        if self.policy.victim == "largest-request":
+            key = lambda p: (-p.cpu_m, -p.mem_mi, p.name)
+        else:
+            key = lambda p: (-p.started, p.name)
         residents = sorted(
             (pod for pod in self.cluster.pods.values()
              if pod.node == node.name and pod.phase == RUNNING),
-            key=lambda p: (-p.started, p.name))
+            key=key)
         evicted = 0
         for pod in residents:
             if evicted >= self.policy.max_evict_per_node:
@@ -104,4 +123,5 @@ class Descheduler:
         return {"ticks": self.ticks, "active_cycles": self.cycles,
                 "evictions": self.evictions,
                 "interval_s": self.policy.interval_s,
-                "util_threshold": self.policy.util_threshold}
+                "util_threshold": self.policy.util_threshold,
+                "victim": self.policy.victim}

@@ -31,6 +31,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core import calibration as cal
+from repro.core.autoscaler import Autoscaler, AutoscalePolicy
 from repro.core.baselines import ArgoLikeEngine, BatchJobEngine, DirectSubmitEngine
 from repro.core.chaos import ChaosInjector, ChaosSchedule
 from repro.core.cluster import Cluster
@@ -66,6 +67,7 @@ class RunResult:
     arbiter: Optional[AdmissionArbiter] = None
     chaos: Optional[ChaosInjector] = None
     descheduler: Optional[Descheduler] = None
+    autoscaler: Optional[Autoscaler] = None
 
 
 class ControlPlane:
@@ -88,7 +90,8 @@ class ControlPlane:
                  capture_trace: bool = True,
                  chaos: Optional[ChaosSchedule] = None,
                  placement: str = "first-fit",
-                 deschedule: Optional[DeschedulePolicy] = None):
+                 deschedule: Optional[DeschedulePolicy] = None,
+                 autoscale: Optional[AutoscalePolicy] = None):
         if engine_name not in ENGINES:
             raise ValueError(f"unknown engine {engine_name!r}; "
                              f"expected one of {sorted(ENGINES)}")
@@ -148,6 +151,18 @@ class ControlPlane:
         self.gateway = WorkflowGateway(self.sim, self.engine.submit, seed=seed,
                                        capture_trace=capture_trace)
         self.engine.on_workflow_done = self.gateway.workflow_done
+
+        # elastic node pools (ISSUE 9): None arms nothing — zero events,
+        # zero draws, the full roster stays provisioned (bit-identical).
+        # Built last so its depth signal can read the arbiter's queue.
+        self.autoscaler: Optional[Autoscaler] = None
+        if autoscale is not None:
+            arbiter = self.arbiter
+            pending_fn = ((lambda: len(arbiter.pending))
+                          if arbiter is not None else None)
+            self.autoscaler = Autoscaler(self.sim, self.cluster, autoscale,
+                                         cluster_cfg=cluster_cfg,
+                                         pending_fn=pending_fn)
 
     # -- tenancy knobs -------------------------------------------------------
     def add_stream(self, workflow: Workflow, repeats: int = 1,
@@ -223,7 +238,8 @@ class ControlPlane:
                          sim=self.sim, engine=self.engine,
                          api_calls=self.cluster.api_calls,
                          gateway=self.gateway, arbiter=self.arbiter,
-                         chaos=self.chaos, descheduler=self.descheduler)
+                         chaos=self.chaos, descheduler=self.descheduler,
+                         autoscaler=self.autoscaler)
 
 
 def run_experiment(engine_name: str, workflow: Workflow, repeats: int = 1,

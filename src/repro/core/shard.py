@@ -60,6 +60,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core import calibration as cal
 from repro.core.chaos import ChaosSchedule
+from repro.core.autoscaler import AutoscalePolicy
 from repro.core.descheduler import DeschedulePolicy
 from repro.core.metrics import MetricsPartial
 from repro.core.runner import ControlPlane
@@ -137,6 +138,7 @@ class ShardSpec:
     chaos: Optional[ChaosSchedule] = None     # already spawned per shard
     placement: str = "first-fit"              # scatter-cycle node pick
     deschedule: Optional[DeschedulePolicy] = None  # per-shard daemon
+    autoscale: Optional[AutoscalePolicy] = None    # already spawned per shard
 
 
 def _spec_tenants(spec: ShardSpec) -> List[str]:
@@ -162,7 +164,8 @@ def _build_shard_plane(spec: ShardSpec) -> ControlPlane:
         retain_pod_log=spec.retain_pod_log, lifecycle=spec.lifecycle,
         queue=spec.queue, fold_completed=spec.fold_completed,
         capture_trace=spec.capture_trace, chaos=spec.chaos,
-        placement=spec.placement, deschedule=spec.deschedule)
+        placement=spec.placement, deschedule=spec.deschedule,
+        autoscale=spec.autoscale)
     for stream in spec.streams:
         plane.add_stream(**stream)
     if spec.trace_records:
@@ -243,6 +246,12 @@ def _run_shard(spec: ShardSpec) -> dict:
         "rebalances": getattr(res.cluster, "rebalances", 0),
         "descheduler": (res.descheduler.counters()
                         if res.descheduler is not None else None),
+        # provisioned-capacity cost accounting (ISSUE 9): always
+        # recorded (fixed rosters report flat provisioning); merged
+        # exactly by ShardedRunResult.cost_summary
+        "cost": res.cluster.cost_summary(),
+        "autoscaler": (res.autoscaler.counters()
+                       if res.autoscaler is not None else None),
         # per-process high-water mark: each worker process runs exactly
         # one shard, so this is the shard's own RSS
         "peak_rss_mib": _resource.getrusage(
@@ -422,7 +431,55 @@ class ShardedRunResult:
             if not c:
                 continue
             for key, val in c.items():
-                if key in ("interval_s", "util_threshold"):
+                if key in ("interval_s", "util_threshold", "victim"):
+                    out[key] = val
+                else:
+                    out[key] = out.get(key, 0) + val
+        return out
+
+    def cost_summary(self) -> Dict[str, float]:
+        """Exact merge of the per-shard provisioned-capacity costs:
+        the shards' rosters are disjoint slices of the whole cluster,
+        so area integrals and flip counts add, peaks/lows add too
+        (each shard's extremum is over its own slice — concurrent
+        daemon ticks make the cluster-wide extremum the sum), and the
+        utilization-over-provisioned ratios are recomputed from the
+        pooled areas."""
+        acc: Dict[str, float] = {}
+        sum_keys = ("node_seconds", "cpu_mcore_seconds", "mem_mib_seconds",
+                    "used_cpu_mcore_seconds", "used_mem_mib_seconds",
+                    "provisioned_peak_nodes", "provisioned_low_nodes",
+                    "provision_flips")
+        for s in self.shards:
+            c = s.get("cost")
+            if not c:
+                continue
+            for key in sum_keys:
+                acc[key] = acc.get(key, 0.0) + c.get(key, 0.0)
+        if not acc:
+            return {}
+        cpu_s = acc.get("cpu_mcore_seconds", 0.0)
+        mem_s = acc.get("mem_mib_seconds", 0.0)
+        acc["cpu_util_over_provisioned"] = (
+            acc.get("used_cpu_mcore_seconds", 0.0) / cpu_s
+            if cpu_s > 0 else 0.0)
+        acc["mem_util_over_provisioned"] = (
+            acc.get("used_mem_mib_seconds", 0.0) / mem_s
+            if mem_s > 0 else 0.0)
+        return acc
+
+    def autoscaler_counters(self) -> Dict[str, float]:
+        """Summed autoscaler counters across shards (empty dict when
+        no shard armed a daemon).  Config echoes are identical per
+        shard, so keeping the last value is exact."""
+        out: Dict[str, float] = {}
+        for s in self.shards:
+            c = s.get("autoscaler")
+            if not c:
+                continue
+            for key, val in c.items():
+                if key in ("interval_s", "pending_threshold",
+                           "sustain_s", "idle_s"):
                     out[key] = val
                 else:
                     out[key] = out.get(key, 0) + val
@@ -525,6 +582,7 @@ class ShardedControlPlane:
                  chaos: Optional[ChaosSchedule] = None,
                  placement: str = "first-fit",
                  deschedule: Optional[DeschedulePolicy] = None,
+                 autoscale: Optional[AutoscalePolicy] = None,
                  on_shard_failure: str = "raise",
                  shard_timeout_s: Optional[float] = None,
                  heartbeat_s: float = 2.0,
@@ -560,7 +618,9 @@ class ShardedControlPlane:
             fold_completed=fold_completed, capture_trace=capture_trace,
             record_bindings=record_bindings, profile=profile,
             chaos=chaos.spawn(i) if chaos is not None else None,
-            placement=placement, deschedule=deschedule)
+            placement=placement, deschedule=deschedule,
+            autoscale=(autoscale.spawn(i, workers)
+                       if autoscale is not None else None))
             for i in range(workers)]
 
     # -- tenancy knobs (ControlPlane API, routed by tenant hash) ----------

@@ -49,6 +49,17 @@ chaos seed exactly replayable: chaos draws come from a separate
 sha256-spawned stream (core/chaos.py) and the scheduler RNG's
 consumption schedule never changes.
 
+The elastic autoscaler (ISSUE 9) rides the exact same contract: the
+FULL max roster is materialized at cluster build, so the native
+arrays keep their fixed node indices for the whole run, and
+``provision_node`` / ``deprovision_node`` only flip the node's
+``ready[]`` slot (plus the free-capacity words) through the same
+``restore_node`` / ``drain_node`` writes chaos uses.  A deprovisioned
+node is never bound to, every shuffle still consumes its full draw
+sequence, and the daemon itself draws nothing — an autoscaler-free
+run is bit-identical to PR 8 and an autoscaled run is a pure
+function of the seed on both backends.
+
 Scored placement (ISSUE 8) follows the same word-stream discipline:
 ``placement="scored-spread"`` / ``"scored-pack"`` change ONLY which
 node the fused cycle picks (an integer least-allocated score over the

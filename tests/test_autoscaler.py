@@ -1,0 +1,417 @@
+"""Elastic node autoscaler (ISSUE 9).
+
+Pins for the node-pool autoscaling plane:
+
+* ``autoscale=None`` (the default) reproduces the pinned
+  binding-sequence hashes bit-for-bit — the provisioning code path
+  must be invisible unless opted into;
+* an armed autoscaler consumes ZERO RNG words (scheduler stream state
+  identical to a daemon-free run) and a fixed seed replays exactly;
+* scale-up answers sustained pending depth, scale-down drains idle
+  nodes without ever stranding a pending pod, and the autoscaled run
+  pays materially fewer node-seconds than the fixed roster at equal
+  completion;
+* autoscaler + descheduler + chaos daemon timers never keep a drained
+  sim alive (liveness under all six policies, fast walks == generic);
+* chaos only victimizes provisioned nodes and a chaos rejoin cannot
+  resurrect a node the autoscaler deprovisioned while it was down;
+* sharded cost/autoscaler metrics merge exactly (forked == inline).
+"""
+import hashlib
+import math
+
+import pytest
+
+from repro.configs.workflows import get_workflow_spec, wide_fanout
+from repro.core import calibration as cal
+from repro.core.autoscaler import Autoscaler, AutoscalePolicy, NodePool
+from repro.core.chaos import ChaosSchedule
+from repro.core.dag import make_workflow
+from repro.core.descheduler import DeschedulePolicy
+from repro.core.runner import ControlPlane
+from repro.core.shard import ShardedControlPlane
+
+from tests.test_scale_core import PINNED, _binding_sequence
+
+POLICIES = ("fifo", "priority", "fair-share", "drf", "quota", "preempt")
+
+MONTAGE = make_workflow("montage", get_workflow_spec("montage"))
+
+
+def _plane(policy="fifo", n_nodes=20, seed=42, autoscale=None, **kw):
+    plane = ControlPlane("kubeadaptor", admission_policy=policy,
+                         cluster_cfg=cal.PaperCluster(n_nodes=n_nodes),
+                         seed=seed, usage_mode="event",
+                         autoscale=autoscale, **kw)
+
+    def load(p):
+        p.add_stream(MONTAGE, repeats=8, tenant="a", arrival="concurrent",
+                     concurrency=4, priority=10, weight=3.0)
+        p.add_stream(MONTAGE, repeats=8, tenant="b", arrival="concurrent",
+                     concurrency=4, priority=0, weight=1.0)
+    return plane, load
+
+
+def _elastic_policy(**kw):
+    base = dict(min_frac=0.2, interval_s=10.0, sustain_s=10.0,
+                idle_s=30.0, scale_step=2)
+    base.update(kw)
+    return AutoscalePolicy(**base)
+
+
+# ---------------------------------------------------------------------------
+# policy validation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw", [dict(interval_s=0.0),
+                                dict(pending_threshold=0),
+                                dict(sustain_s=-1.0),
+                                dict(idle_s=-1.0),
+                                dict(scale_step=0),
+                                dict(min_frac=0.0),
+                                dict(min_frac=1.5),
+                                dict(start_after_s=-1.0)])
+def test_bad_policy_rejected(kw):
+    plane, _ = _plane()
+    with pytest.raises(ValueError):
+        Autoscaler(plane.sim, plane.cluster, AutoscalePolicy(**kw))
+
+
+def test_unknown_pool_class_rejected():
+    with pytest.raises(ValueError):
+        _plane(autoscale=AutoscalePolicy(
+            pools=(NodePool("no-such-class", 1, 4),)))
+
+
+def test_unknown_descheduler_victim_rejected():
+    with pytest.raises(ValueError):
+        _plane(deschedule=DeschedulePolicy(victim="no-such-order"))
+
+
+# ---------------------------------------------------------------------------
+# disabled => bit-identical; armed-but-inert => zero draws
+# ---------------------------------------------------------------------------
+def test_disabled_matches_pinned_hash():
+    """The provisioning plumbing must be invisible without a policy:
+    the PR-2 pinned binding hash still holds."""
+    plane = ControlPlane("kubeadaptor", seed=7)
+    seq = _binding_sequence(
+        plane, lambda p: p.gateway.load([MONTAGE.with_instance(i)
+                                         for i in range(2)]))
+    digest = hashlib.sha256("\n".join(seq).encode()).hexdigest()
+    want_digest, want_n = PINNED["paper"]
+    assert (len(seq), digest) == (want_n, want_digest)
+
+
+def test_full_floor_autoscaler_is_inert_and_drawless():
+    """min_frac=1.0 keeps the whole roster provisioned: the armed
+    daemon must change nothing — identical bindings AND an identical
+    scheduler RNG state (zero words drawn by the daemon)."""
+    base, load_a = _plane()
+    seq_a = _binding_sequence(base, load_a)
+    armed, load_b = _plane(autoscale=_elastic_policy(min_frac=1.0))
+    seq_b = _binding_sequence(armed, load_b)
+    assert seq_a == seq_b
+    assert base.cluster.rng.getstate() == armed.cluster.rng.getstate()
+    assert armed.autoscaler.ticks > 0
+    assert armed.cluster.provision_flips == 0
+
+
+def test_enabled_replays_exactly():
+    runs = []
+    for _ in range(2):
+        plane, load = _plane(autoscale=_elastic_policy())
+        seq = _binding_sequence(plane, load)
+        runs.append((seq, plane.sim.last_event_t,
+                     plane.cluster.cost_summary(),
+                     plane.autoscaler.counters()))
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# cost accounting
+# ---------------------------------------------------------------------------
+def test_fixed_roster_cost_is_flat_provisioning():
+    plane, load = _plane(n_nodes=10)
+    load(plane)
+    res = plane.run()
+    cost = res.cluster.cost_summary()
+    span = res.sim.last_event_t
+    assert cost["node_seconds"] == pytest.approx(10 * span)
+    assert cost["cpu_mcore_seconds"] == pytest.approx(
+        10 * cal.PaperCluster.node_cpu_m * span)
+    assert cost["provision_flips"] == 0
+    assert cost["provisioned_peak_nodes"] == 10
+    assert cost["provisioned_low_nodes"] == 10
+    assert 0.0 < cost["cpu_util_over_provisioned"] <= 1.0
+
+
+def test_autoscaled_run_saves_node_seconds_at_equal_completion():
+    fixed, load = _plane()
+    load(fixed)
+    rf = fixed.run()
+    elastic, load = _plane(autoscale=_elastic_policy())
+    load(elastic)
+    re_ = elastic.run()
+    done = lambda r: sum(1 for w in r.metrics.workflows.values()
+                         if w.ns_deleted > 0 and not w.failed)
+    assert done(rf) == done(re_) == 16
+    cf = rf.cluster.cost_summary()
+    ce = re_.cluster.cost_summary()
+    assert ce["node_seconds"] < 0.8 * cf["node_seconds"]
+    # paying less capacity means using it better
+    assert ce["cpu_util_over_provisioned"] > cf["cpu_util_over_provisioned"]
+
+
+def test_scale_up_under_sustained_backlog():
+    """A deep open-loop surge must grow the roster from the floor."""
+    pol = _elastic_policy(min_frac=0.1, scale_step=4)
+    plane = ControlPlane("kubeadaptor", admission_policy="fifo",
+                         cluster_cfg=cal.PaperCluster(n_nodes=20),
+                         seed=3, usage_mode="event", autoscale=pol)
+    plane.add_stream(MONTAGE, repeats=40, tenant="surge",
+                     arrival="concurrent", concurrency=20)
+    res = plane.run()
+    ac = res.autoscaler.counters()
+    assert ac["scale_up_events"] > 0
+    assert ac["nodes_provisioned"] > 0
+    cost = res.cluster.cost_summary()
+    assert cost["provisioned_peak_nodes"] > cost["provisioned_low_nodes"]
+    done = sum(1 for w in res.metrics.workflows.values()
+               if w.ns_deleted > 0 and not w.failed)
+    assert done == 40
+
+
+def test_scale_down_drains_idle_nodes():
+    """Two bursts separated by a long idle valley: the roster must
+    shrink in the valley (scale_down events with zero pods disrupted
+    — only idle nodes drain) and still finish the second burst."""
+    pol = _elastic_policy(min_frac=0.1, interval_s=5.0, sustain_s=5.0,
+                          idle_s=10.0, scale_step=4)
+    plane = ControlPlane("kubeadaptor", admission_policy="fifo",
+                         cluster_cfg=cal.PaperCluster(n_nodes=16),
+                         seed=5, usage_mode="event", autoscale=pol)
+    plane.add_stream(MONTAGE, repeats=12, tenant="burst1",
+                     arrival="concurrent", concurrency=12)
+    plane.add_stream(MONTAGE, repeats=4, tenant="trickle",
+                     arrival="poisson", rate=0.005, burst=1)
+    res = plane.run()
+    ac = res.autoscaler.counters()
+    assert ac["scale_down_events"] > 0
+    assert ac["nodes_deprovisioned"] > 0
+    assert ac["pods_drained"] == 0          # only idle nodes drained
+    done = sum(1 for w in res.metrics.workflows.values()
+               if w.ns_deleted > 0 and not w.failed)
+    assert done == 16
+    assert sum(1 for w in res.metrics.workflows.values() if w.failed) == 0
+
+
+# ---------------------------------------------------------------------------
+# daemon interplay: liveness under all six policies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+def test_all_daemons_never_keep_sim_alive(policy):
+    """Autoscaler + descheduler + chaos timers are all daemons: the
+    sim must drain at the workload's end, every workflow completing
+    (scale-down never strands a pending pod)."""
+    chaos = ChaosSchedule(seed=9, node_kill_interval_s=200.0,
+                          node_downtime_s=60.0, start_after_s=30.0)
+    plane, load = _plane(policy=policy,
+                         autoscale=_elastic_policy(),
+                         deschedule=DeschedulePolicy(interval_s=20.0,
+                                                     util_threshold=0.85),
+                         chaos=chaos)
+    load(plane)
+    res = plane.run(horizon_s=500_000)
+    assert res.sim.last_event_t < 100_000       # drained, not horizon-parked
+    done = sum(1 for w in res.metrics.workflows.values()
+               if w.ns_deleted > 0 and not w.failed)
+    assert done == 16
+    assert res.autoscaler.ticks > 0
+
+
+def test_fast_walks_match_generic_under_autoscaling():
+    import repro.core.resources as rs
+
+    def run(fast):
+        grants = []
+        orig_init = rs.AdmissionArbiter.__init__
+        orig_ck = rs.AdmissionArbiter._create_bookkeep
+
+        def pinit(self, *a, **k):
+            orig_init(self, *a, **k)
+            self._fast = fast
+
+        def pck(self, req):
+            grants.append((self.inf.pods.sim.now(), req.namespace,
+                           req.task.id))
+            return orig_ck(self, req)
+
+        rs.AdmissionArbiter.__init__ = pinit
+        rs.AdmissionArbiter._create_bookkeep = pck
+        try:
+            plane, load = _plane(policy="drf",
+                                 autoscale=_elastic_policy())
+            seq = _binding_sequence(plane, load)
+            return (grants, seq, plane.arbiter.deferrals,
+                    plane.arbiter.admitted)
+        finally:
+            rs.AdmissionArbiter.__init__ = orig_init
+            rs.AdmissionArbiter._create_bookkeep = orig_ck
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# chaos interplay
+# ---------------------------------------------------------------------------
+def test_chaos_only_victimizes_provisioned_nodes():
+    plane, load = _plane(n_nodes=10,
+                         autoscale=_elastic_policy(min_frac=0.3))
+    cluster = plane.cluster
+    # deprovisioned floor: chaos victim candidates exclude those nodes
+    candidates = [n.name for n in cluster._node_seq
+                  if n.ready and n.provisioned]
+    assert len(candidates) == 3
+    assert all(cluster.nodes[n].provisioned for n in candidates)
+
+
+def test_chaos_rejoin_cannot_resurrect_deprovisioned_node():
+    """kill -> autoscaler deprovisions while down -> the scheduled
+    chaos restore must be a no-op; only provision_node revives."""
+    plane, _ = _plane(n_nodes=4)
+    cluster = plane.cluster
+    cluster.kill_node("node2")
+    assert not cluster.nodes["node2"].ready
+    cluster.deprovision_node("node2")
+    cluster.restore_node("node2")               # late chaos rejoin
+    assert not cluster.nodes["node2"].ready     # stayed down
+    assert cluster._prov_nodes == 3
+    cluster.provision_node("node2")             # the only way back
+    assert cluster.nodes["node2"].ready
+    assert cluster._prov_nodes == 4
+    assert cluster.provision_flips == 2
+
+
+def test_deprovision_drains_residents_through_requeue():
+    """Deprovisioning a busy node reuses the PR-7 drain path: the
+    residents requeue and the run still completes everything."""
+    pol = AutoscalePolicy(min_frac=1.0, interval_s=5.0, sustain_s=5.0,
+                          idle_s=1e9)  # inert daemon; manual flips below
+    plane, load = _plane(n_nodes=6, autoscale=pol)
+    load(plane)
+    plane.sim.after(40.0, lambda: plane.cluster.deprovision_node("node3"),
+                    note="test-deprovision")
+    plane.sim.after(90.0, lambda: plane.cluster.provision_node("node3"),
+                    note="test-provision")
+    res = plane.run()
+    done = sum(1 for w in res.metrics.workflows.values()
+               if w.ns_deleted > 0 and not w.failed)
+    assert done == 16
+    assert sum(1 for w in res.metrics.workflows.values() if w.failed) == 0
+    assert res.cluster.provision_flips == 2
+
+
+# ---------------------------------------------------------------------------
+# pools and sharding
+# ---------------------------------------------------------------------------
+def test_derived_pools_respect_hetero_classes():
+    pol = _elastic_policy(min_frac=0.5)
+    plane = ControlPlane("kubeadaptor",
+                         cluster_cfg=cal.hetero_cluster(12, "big-small"),
+                         seed=1, autoscale=pol)
+    pools = {p.node_class: (len(p.names), p.min_n)
+             for p in plane.autoscaler._pools}
+    # big-small cycle: 1x big + 2x small per 3 nodes
+    assert pools == {"big": (4, 2), "small": (8, 4)}
+    assert plane.cluster._prov_nodes == 6
+
+
+def test_explicit_pool_spawn_partitions_like_nodes():
+    pol = AutoscalePolicy(pools=(NodePool("node", 3, 7),))
+    slices = [pol.spawn(i, 2).pools[0] for i in range(2)]
+    assert [(p.min, p.max) for p in slices] == [(2, 4), (1, 3)]
+    # derived pools pass through unchanged
+    derived = _elastic_policy()
+    assert derived.spawn(0, 4) is derived
+
+
+def test_sharded_cost_merge_exact():
+    pol = _elastic_policy()
+
+    def run(processes):
+        sp = ShardedControlPlane(
+            2, cluster_cfg=cal.PaperCluster(n_nodes=12), seed=11,
+            autoscale=pol, processes=processes, usage_mode="event",
+            fold_completed=True, capture_trace=False)
+        for i in range(4):
+            sp.add_stream(MONTAGE, repeats=4, tenant=f"t{i}",
+                          arrival="concurrent", concurrency=2)
+        res = sp.run()
+        return (res.cost_summary(), res.autoscaler_counters(),
+                res.completed_workflows)
+
+    inline = run(False)
+    forked = run(True)
+    assert inline == forked
+    cost, counters, completed = inline
+    assert completed == 16
+    assert cost["node_seconds"] > 0
+    assert counters["managed_nodes"] == 12
+    # merged ratio is recomputed from pooled areas
+    assert cost["cpu_util_over_provisioned"] == pytest.approx(
+        cost["used_cpu_mcore_seconds"] / cost["cpu_mcore_seconds"])
+
+
+def test_sharded_fixed_roster_cost_unchanged_and_flat():
+    """No autoscaler: the always-on cost record must show flat
+    provisioning on every shard and merge to n_nodes * makespan'ish
+    totals without touching any behavioral field."""
+    sp = ShardedControlPlane(
+        2, cluster_cfg=cal.PaperCluster(n_nodes=8), seed=11,
+        processes=False, usage_mode="event",
+        fold_completed=True, capture_trace=False)
+    for i in range(4):
+        sp.add_stream(MONTAGE, repeats=2, tenant=f"t{i}",
+                      arrival="concurrent", concurrency=2)
+    res = sp.run()
+    cost = res.cost_summary()
+    assert cost["provision_flips"] == 0
+    assert cost["provisioned_peak_nodes"] == 8
+    want = sum(s["cost"]["node_seconds"] for s in res.shards)
+    assert cost["node_seconds"] == pytest.approx(want)
+    assert res.autoscaler_counters() == {}
+
+
+# ---------------------------------------------------------------------------
+# descheduler victim policies (satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("victim", ("youngest", "largest-request"))
+def test_descheduler_victim_policies_run_clean(victim):
+    plane, load = _plane(
+        deschedule=DeschedulePolicy(interval_s=15.0, util_threshold=0.7,
+                                    victim=victim))
+    load(plane)
+    res = plane.run()
+    assert res.descheduler.counters()["victim"] == victim
+    done = sum(1 for w in res.metrics.workflows.values()
+               if w.ns_deleted > 0 and not w.failed)
+    assert done == 16
+
+
+def test_largest_request_evicts_biggest_pod_first():
+    """On a synthetic hot node the two victim orders pick different
+    pods: youngest takes the latest-started, largest-request takes
+    the biggest ask."""
+    from repro.core.descheduler import Descheduler
+
+    class _Pod:
+        def __init__(self, name, started, cpu_m, mem_mi):
+            self.name, self.started = name, started
+            self.cpu_m, self.mem_mi = cpu_m, mem_mi
+
+    pods = [_Pod("old-big", 1.0, 4000, 4000),
+            _Pod("new-small", 9.0, 500, 500)]
+    young = sorted(pods, key=lambda p: (-p.started, p.name))
+    large = sorted(pods, key=lambda p: (-p.cpu_m, -p.mem_mi, p.name))
+    assert young[0].name == "new-small"
+    assert large[0].name == "old-big"
