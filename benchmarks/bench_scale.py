@@ -37,7 +37,12 @@ Usage:
         [--autoscale-interval 0] [--autoscale-pending-threshold 1] \
         [--autoscale-sustain 30] [--autoscale-idle 60] \
         [--autoscale-min-frac 0.25] [--autoscale-scale-step 1] \
-        [--autoscale-start-after 0]
+        [--autoscale-start-after 0] \
+        [--gateway-max-pending 0] [--gateway-per-tenant-cap 0] \
+        [--gateway-shed reject-newest|shed-oldest|fair-shed] \
+        [--gateway-retry-after 5] [--gateway-max-retries 8] \
+        [--gateway-wal-dir DIR] [--chaos-gateway-drop-rate 0] \
+        [--chaos-gateway-dup-rate 0] [--min-complete-frac 0]
 
 ``--budget-s`` exits 2 when total wall time exceeds the budget;
 ``--min-events-per-sec`` / ``--max-events-per-pod`` /
@@ -148,6 +153,32 @@ descheduler scenarios gain the ``victim`` eviction-order echo
 across shards and merge cost exactly (areas/flips sum, ratios
 recomputed from pooled areas).
 
+Durable front door tier (ISSUE 10): ``--gateway-max-pending`` arms the
+``DurableGateway`` (repro.core.gateway) on every policy run — a
+per-shard append-only submission WAL plus admission backpressure: at
+most ``max-pending`` submissions admitted-but-unfinished per shard,
+rejects carrying deterministic retry-after timers from a dedicated
+sha256-spawned stream, and ``--gateway-shed`` picking the overload
+victim (``reject-newest`` / ``shed-oldest`` / ``fair-shed``).
+``--gateway-wal-dir`` arms the crash-durable file sink
+(``shard-{i}.wal``), so a shard killed mid-run (REPRO_SHARD_KILL) and
+restarted replays its log with exactly-once dedup.  An unsaturated
+gateway performs zero draws and adds zero events, so runs without the
+flags stay bit-identical to ``bench_scale/v7`` behavior.  v8 rows add
+``"gateway"`` (the merged qstat snapshot: per-tenant
+queued/admitted/running/done/rejected/retried/shed, peak pending /
+waiting depths, retry horizon, transport-fault and WAL counters) plus
+the arbiter's submission-edge counters, and two gates arm
+automatically on every gateway row: peak pending must stay <=
+max-pending (BACKPRESSURE BREACH) and admitted + shed must equal
+submissions with an empty retry room at drain (GATEWAY ACCOUNTING).
+``--require-complete`` on a gateway row asserts completed + shed ==
+workflows instead of completed == workflows; ``--min-complete-frac``
+sets the eventual-completion floor for the overload tier (e.g. 0.99).
+``--chaos-gateway-drop-rate`` / ``--chaos-gateway-dup-rate`` extend
+the chaos plane to the gate->arbiter hop: dropped submissions are
+redelivered from the WAL, duplicates are suppressed by the dedup set.
+
 The script still runs against the pre-optimization core (counters it
 introduced are read via getattr) so speedups can be measured by
 checking out two revisions and comparing ``wall_s``.
@@ -181,11 +212,11 @@ BATCH_DEADLINE_S = 3600.0
 # (sum over the 8 streams = 120%, so caps genuinely bind under load)
 PROD_QUOTA_FRAC = 0.20
 BATCH_QUOTA_FRAC = 0.10
-SCHEMA = "bench_scale/v7"
+SCHEMA = "bench_scale/v8"
 
 
 def _plane_kwargs(usage_mode, queue, lifecycle, placement="first-fit",
-                  deschedule=None, autoscale=None):
+                  deschedule=None, autoscale=None, gateway=None):
     """Knobs that only the optimized core understands."""
     params = inspect.signature(ControlPlane.__init__).parameters
     kw = {}
@@ -205,6 +236,8 @@ def _plane_kwargs(usage_mode, queue, lifecycle, placement="first-fit",
         kw["deschedule"] = deschedule
     if "autoscale" in params and autoscale is not None:
         kw["autoscale"] = autoscale
+    if "gateway" in params and gateway is not None:
+        kw["gateway"] = gateway
     return kw
 
 
@@ -220,24 +253,33 @@ def build_plane(policy, n_workflows, n_nodes, seed, usage_mode="event",
                 queue=None, lifecycle=None, trace=None, workers=1,
                 shard_procs=None, processes=True, profile=False,
                 chaos=None, placement="first-fit", node_mix="uniform",
-                deschedule=None, autoscale=None):
+                deschedule=None, autoscale=None, gateway=None,
+                wal_dir=None):
     cfg = _cluster_cfg(n_nodes, node_mix)
     if workers > 1:
         from repro.core.shard import ShardedControlPlane
+        extra = {}
+        if gateway is not None and wal_dir:
+            extra["wal_dir"] = wal_dir
         plane = ShardedControlPlane(
             workers, admission_policy=policy,
             cluster_cfg=cfg, seed=seed,
             fold_completed=True, capture_trace=False,
             shard_procs=shard_procs, processes=processes, profile=profile,
-            chaos=chaos, **_plane_kwargs(usage_mode, queue, lifecycle,
-                                         placement, deschedule, autoscale))
+            chaos=chaos, **extra,
+            **_plane_kwargs(usage_mode, queue, lifecycle,
+                            placement, deschedule, autoscale, gateway))
     else:
+        extra = {}
+        if gateway is not None and wal_dir:
+            import os as _os
+            extra["wal_path"] = _os.path.join(wal_dir, "shard-0.wal")
         plane = ControlPlane("kubeadaptor", admission_policy=policy,
                              cluster_cfg=cfg,
-                             seed=seed, chaos=chaos,
+                             seed=seed, chaos=chaos, **extra,
                              **_plane_kwargs(usage_mode, queue, lifecycle,
                                              placement, deschedule,
-                                             autoscale))
+                                             autoscale, gateway))
     if trace is not None:
         plane.add_trace(trace.get("arrivals", []),
                         tenants=trace.get("tenants"))
@@ -292,23 +334,41 @@ def _add_stream_accepts(name):
     return name in inspect.signature(ControlPlane.add_stream).parameters
 
 
+def _round_gateway(snap):
+    """Round the snapshot's float fields for the report (counters and
+    gauges stay exact ints)."""
+    out = dict(snap)
+    out["retry_horizon_t"] = round(snap.get("retry_horizon_t", 0.0), 2)
+    if "wal" in out:
+        out["wal"] = {k: v for k, v in out["wal"].items() if k != "chain"}
+    return out
+
+
 def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
                usage_mode="event", queue=None, lifecycle=None, trace=None,
                profile=False, workers=1, shard_procs=None, chaos=None,
                placement="first-fit", node_mix="uniform", deschedule=None,
-               autoscale=None):
+               autoscale=None, gateway=None, wal_dir=None):
+    if wal_dir:
+        # one WAL namespace per (policy, tier) run: a later run must
+        # never replay a previous policy's log as its own durable prefix
+        import os as _os
+        wal_dir = _os.path.join(
+            wal_dir, f"{policy}-{n_workflows}wf-{n_nodes}n")
     if workers > 1:
         return _run_policy_sharded(
             policy, n_workflows, n_nodes, seed, horizon_s=horizon_s,
             usage_mode=usage_mode, queue=queue, lifecycle=lifecycle,
             trace=trace, profile=profile, workers=workers,
             shard_procs=shard_procs, chaos=chaos, placement=placement,
-            node_mix=node_mix, deschedule=deschedule, autoscale=autoscale)
+            node_mix=node_mix, deschedule=deschedule, autoscale=autoscale,
+            gateway=gateway, wal_dir=wal_dir)
     plane = build_plane(policy, n_workflows, n_nodes, seed,
                         usage_mode=usage_mode, queue=queue,
                         lifecycle=lifecycle, trace=trace, chaos=chaos,
                         placement=placement, node_mix=node_mix,
-                        deschedule=deschedule, autoscale=autoscale)
+                        deschedule=deschedule, autoscale=autoscale,
+                        gateway=gateway, wal_dir=wal_dir)
     try:
         import repro.core.cluster as _cluster_mod
         copies0 = _cluster_mod.SNAPSHOTS_MADE
@@ -446,6 +506,16 @@ def run_policy(policy, n_workflows, n_nodes, seed, horizon_s=400_000.0,
         rec["recovery"] = {
             k: (round(v, 4) if isinstance(v, float) else v)
             for k, v in m.export_partial().recovery_summary().items()}
+    # durable front door observables (ISSUE 10): only emitted when the
+    # gateway was armed — gateway-free rows keep the pre-v8 key set.
+    # The submission-edge counters come off the arbiter (satellite:
+    # counters() exposes them), not gateway internals.
+    gate = getattr(res, "gate", None)
+    if gate is not None:
+        rec["gateway"] = _round_gateway(gate.snapshot())
+        rec["gateway_rejects"] = getattr(res.arbiter, "gateway_rejects", 0)
+        rec["gateway_retries"] = getattr(res.arbiter, "gateway_retries", 0)
+        rec["gateway_shed"] = getattr(res.arbiter, "gateway_shed", 0)
     return rec
 
 
@@ -454,7 +524,8 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
                         lifecycle=None, trace=None, profile=False,
                         workers=2, shard_procs=None, chaos=None,
                         placement="first-fit", node_mix="uniform",
-                        deschedule=None, autoscale=None):
+                        deschedule=None, autoscale=None, gateway=None,
+                        wal_dir=None):
     """One policy run through the tenant-partitioned control plane
     (repro.core.shard): same row schema as the unsharded path plus
     ``workers`` / ``shards[]`` / fork-proof RSS totals."""
@@ -465,7 +536,8 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
                         lifecycle=lifecycle, trace=trace, workers=workers,
                         shard_procs=shard_procs, profile=profile,
                         chaos=chaos, placement=placement, node_mix=node_mix,
-                        deschedule=deschedule, autoscale=autoscale)
+                        deschedule=deschedule, autoscale=autoscale,
+                        gateway=gateway, wal_dir=wal_dir)
     t0 = time.perf_counter()
     res = plane.run(horizon_s=horizon_s)
     wall = time.perf_counter() - t0
@@ -547,6 +619,10 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
             "peak_pending_admission": s["arbiter"].get("max_pending", 0),
             "peak_pending_pods": s["peak_pending_pods"],
             "peak_rss_mib": round(s["peak_rss_mib"], 1),
+            **({"gateway_peak_pending": s["gateway"]["peak_pending"],
+                "wal_records": s["gateway"]["wal"]["records"],
+                "wal_replayed": s["gateway"]["wal"]["replayed"]}
+               if s.get("gateway") else {}),
         } for s in res.shards],
     }
     slo = {t: {"deadline_s": s["deadline_s"],
@@ -600,6 +676,15 @@ def _run_policy_sharded(policy, n_workflows, n_nodes, seed,
         if res.degraded:
             rec["degraded"] = True
             rec["shard_failures"] = res.failures
+    # durable front door observables (ISSUE 10): merged qstat snapshot
+    # (counters/gauges sum over the disjoint tenant partition, peaks
+    # max) plus the summed arbiter submission-edge counters
+    gw = res.gateway_summary()
+    if gw:
+        rec["gateway"] = _round_gateway(gw)
+        rec["gateway_rejects"] = arb.get("gateway_rejects", 0)
+        rec["gateway_retries"] = arb.get("gateway_retries", 0)
+        rec["gateway_shed"] = arb.get("gateway_shed", 0)
     return rec
 
 
@@ -607,13 +692,14 @@ def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
                  queue=None, lifecycle=None, trace=None, trace_path=None,
                  profile=False, workers=1, shard_procs=None, chaos=None,
                  placement="first-fit", node_mix="uniform", deschedule=None,
-                 autoscale=None):
+                 autoscale=None, gateway=None, wal_dir=None):
     runs = [run_policy(p, n_workflows, n_nodes, seed, usage_mode=usage_mode,
                        queue=queue, lifecycle=lifecycle, trace=trace,
                        profile=profile, workers=workers,
                        shard_procs=shard_procs, chaos=chaos,
                        placement=placement, node_mix=node_mix,
-                       deschedule=deschedule, autoscale=autoscale)
+                       deschedule=deschedule, autoscale=autoscale,
+                       gateway=gateway, wal_dir=wal_dir)
             for p in policies]
     scenario = {"workflows": n_workflows, "nodes": n_nodes,
                 "node_cpu_m": cal.PaperCluster.node_cpu_m,
@@ -645,6 +731,14 @@ def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
             "start_after_s": autoscale.start_after_s}
     if workers > 1:
         scenario["workers"] = workers
+    if gateway is not None:
+        scenario["gateway"] = {
+            "max_pending": gateway.max_pending,
+            "per_tenant_cap": gateway.per_tenant_cap,
+            "shed": gateway.shed,
+            "retry_after_s": gateway.retry_after_s,
+            "max_client_retries": gateway.max_client_retries,
+            "wal_dir": wal_dir or None}
     if chaos is not None:
         scenario["chaos"] = {
             "seed": chaos.seed,
@@ -653,6 +747,8 @@ def run_scenario(n_workflows, n_nodes, seed, policies, usage_mode="event",
             "node_downtime_s": chaos.node_downtime_s,
             "api_fault_rate": chaos.api_fault_rate,
             "task_crash_rate": chaos.task_crash_rate,
+            "gateway_drop_rate": chaos.gateway_drop_rate,
+            "gateway_dup_rate": chaos.gateway_dup_rate,
             "start_after_s": chaos.start_after_s}
     if trace is not None:
         arrivals = trace.get("arrivals", [])
@@ -812,6 +908,36 @@ def main():
     ap.add_argument("--autoscale-start-after", type=float, default=0.0,
                     help="sim seconds of calm before the first "
                          "autoscaler tick")
+    ap.add_argument("--gateway-max-pending", type=int, default=0,
+                    help="durable front-door admission bound: max "
+                         "in-flight (admitted, not yet done) workflows "
+                         "per shard (0 = gateway off, bit-identical to "
+                         "v7 behavior)")
+    ap.add_argument("--gateway-per-tenant-cap", type=int, default=0,
+                    help="per-tenant slice of the pending bound "
+                         "(0 = no per-tenant cap)")
+    ap.add_argument("--gateway-shed", default="reject-newest",
+                    choices=("reject-newest", "shed-oldest", "fair-shed"),
+                    help="overload shed discipline at the gate")
+    ap.add_argument("--gateway-retry-after", type=float, default=5.0,
+                    help="base client retry-after horizon in sim "
+                         "seconds (jittered from the gate stream)")
+    ap.add_argument("--gateway-max-retries", type=int, default=8,
+                    help="client retry budget before a rejected "
+                         "submission is shed for good")
+    ap.add_argument("--gateway-wal-dir", default="",
+                    help="directory for per-shard submission WAL files "
+                         "(empty = in-memory segments only)")
+    ap.add_argument("--chaos-gateway-drop-rate", type=float, default=0.0,
+                    help="per-admitted-submission probability the "
+                         "gate->engine hop drops it (WAL redelivers)")
+    ap.add_argument("--chaos-gateway-dup-rate", type=float, default=0.0,
+                    help="per-admitted-submission probability of a "
+                         "duplicate delivery (dedup suppresses it)")
+    ap.add_argument("--min-complete-frac", type=float, default=0.0,
+                    help="gate: fail unless completed workflows >= this "
+                         "fraction of submissions on every row (0 = off; "
+                         "the overload tier uses 0.99)")
     args = ap.parse_args()
 
     policies = [p for p in args.policies.split(",") if p]
@@ -821,7 +947,8 @@ def main():
             trace = json.load(f)
     chaos = None
     if (args.chaos_node_kill_interval or args.chaos_drain_interval
-            or args.chaos_api_fault_rate or args.chaos_task_crash_rate):
+            or args.chaos_api_fault_rate or args.chaos_task_crash_rate
+            or args.chaos_gateway_drop_rate or args.chaos_gateway_dup_rate):
         from repro.core.chaos import ChaosSchedule
         chaos = ChaosSchedule(
             seed=args.chaos_seed,
@@ -830,7 +957,23 @@ def main():
             node_downtime_s=args.chaos_node_downtime,
             api_fault_rate=args.chaos_api_fault_rate,
             task_crash_rate=args.chaos_task_crash_rate,
+            gateway_drop_rate=args.chaos_gateway_drop_rate,
+            gateway_dup_rate=args.chaos_gateway_dup_rate,
             start_after_s=args.chaos_start_after)
+    gateway = None
+    if args.gateway_max_pending > 0:
+        from repro.core.gateway import BackpressurePolicy
+        gateway = BackpressurePolicy(
+            max_pending=args.gateway_max_pending,
+            per_tenant_cap=args.gateway_per_tenant_cap,
+            shed=args.gateway_shed,
+            retry_after_s=args.gateway_retry_after,
+            max_client_retries=args.gateway_max_retries)
+    elif (args.chaos_gateway_drop_rate or args.chaos_gateway_dup_rate
+          or args.gateway_wal_dir):
+        print("--chaos-gateway-*-rate / --gateway-wal-dir require "
+              "--gateway-max-pending > 0", file=sys.stderr)
+        raise SystemExit(2)
     deschedule = None
     if args.deschedule_interval > 0.0:
         from repro.core.descheduler import DeschedulePolicy
@@ -860,7 +1003,8 @@ def main():
                             shard_procs=args.shard_procs or None,
                             chaos=chaos, placement=args.placement,
                             node_mix=args.node_mix, deschedule=deschedule,
-                            autoscale=autoscale)
+                            autoscale=autoscale, gateway=gateway,
+                            wal_dir=args.gateway_wal_dir or None)
         tiers.append(tier)
         n_wf = tier["scenario"]["workflows"]
         shard_tag = f"/{n_workers}w" if n_workers > 1 else ""
@@ -915,9 +1059,35 @@ def main():
         for r in tier["runs"]:
             label = (f"{tier['scenario']['workflows']}wf/"
                      f"{tier['scenario']['nodes']}n {r['policy']}")
+            gw = r.get("gateway")
+            if gw is not None:
+                # automatic gates on every gateway row: the admission
+                # bound must actually hold, and the ledger must balance
+                # exactly (nothing lost, nothing stuck in the gate)
+                tot = gw["totals"]
+                if gw["peak_pending"] > gateway.max_pending:
+                    failures.append(
+                        f"BACKPRESSURE BREACH: {label} peak pending "
+                        f"{gw['peak_pending']} > {gateway.max_pending}")
+                if (tot["admitted"] + tot["shed"] != tot["submissions"]
+                        or tot["queued"]):
+                    failures.append(
+                        f"GATEWAY ACCOUNTING: {label} admitted "
+                        f"{tot['admitted']} + shed {tot['shed']} != "
+                        f"submissions {tot['submissions']} "
+                        f"(queued {tot['queued']})")
             if args.require_complete:
                 want = tier["scenario"]["workflows"]
-                if (r["completed_workflows"] != want
+                if gw is not None:
+                    # under backpressure some submissions are shed by
+                    # design; everything admitted must still complete
+                    done, shed = r["completed_workflows"], gw["totals"]["shed"]
+                    if done + shed != want or r["failed_workflows"]:
+                        failures.append(
+                            f"INCOMPLETE RECOVERY: {label} completed "
+                            f"{done} + shed {shed} != {want}, failed "
+                            f"{r['failed_workflows']}")
+                elif (r["completed_workflows"] != want
                         or r["failed_workflows"]):
                     failures.append(
                         f"INCOMPLETE RECOVERY: {label} completed "
@@ -927,6 +1097,14 @@ def main():
                     failures.append(
                         f"DEGRADED RESULT: {label} dropped shards "
                         f"{[s['shard'] for s in r['shard_failures']]}")
+            if args.min_complete_frac:
+                want = tier["scenario"]["workflows"]
+                frac = r["completed_workflows"] / want if want else 1.0
+                if frac < args.min_complete_frac:
+                    failures.append(
+                        f"COMPLETION FLOOR: {label} completed "
+                        f"{r['completed_workflows']}/{want} "
+                        f"({frac:.3f} < {args.min_complete_frac:.3f})")
             if (args.min_events_per_sec and r["events_per_sec"]
                     and r["events_per_sec"] < args.min_events_per_sec):
                 failures.append(

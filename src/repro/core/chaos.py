@@ -98,6 +98,12 @@ class ChaosSchedule:
     api_fault_rate: float = 0.0
     # per-pod-start probability of a mid-run crash (charges retries)
     task_crash_rate: float = 0.0
+    # submission-transport faults at the durable gateway (ISSUE 10):
+    # per-admitted-submission probability the gate->engine hop drops
+    # the submission (recovered by WAL redelivery) or duplicates it
+    # (suppressed by exactly-once dedup); no-ops without a gateway
+    gateway_drop_rate: float = 0.0
+    gateway_dup_rate: float = 0.0
 
     def spawn(self, shard: int) -> "ChaosSchedule":
         """The schedule for one shard of a sharded plane: same plan,
@@ -110,7 +116,9 @@ class ChaosSchedule:
                     or self.node_drain_interval_s > 0.0
                     or self.events
                     or self.api_fault_rate > 0.0
-                    or self.task_crash_rate > 0.0)
+                    or self.task_crash_rate > 0.0
+                    or self.gateway_drop_rate > 0.0
+                    or self.gateway_dup_rate > 0.0)
 
 
 class ChaosInjector:
@@ -135,6 +143,8 @@ class ChaosInjector:
         self.pods_lost = 0
         self.api_faults = 0
         self.task_crashes = 0
+        self.gateway_drops = 0
+        self.gateway_dups = 0
         self.node_downtime_s = 0.0       # accumulated on restore
         self._node_events = 0
         self._down_since: dict = {}      # node -> kill/drain instant
@@ -237,6 +247,25 @@ class ChaosInjector:
         self.task_crashes += 1
         return self.rng.random() * duration_s
 
+    def gateway_fault_draw(self) -> Optional[str]:
+        """One seeded draw per gateway transport hop: ``"drop"`` loses
+        the submission in flight (the WAL redelivers), ``"dup"``
+        delivers it twice (the dedup set suppresses the copy), None
+        passes clean.  Zero draws when both rates are 0 — a gateway-
+        armed, fault-free run replays the PR-7 chaos stream exactly."""
+        drop, dup = (self.schedule.gateway_drop_rate,
+                     self.schedule.gateway_dup_rate)
+        if drop <= 0.0 and dup <= 0.0:
+            return None
+        u = self.rng.random()
+        if u < drop:
+            self.gateway_drops += 1
+            return "drop"
+        if u < drop + dup:
+            self.gateway_dups += 1
+            return "dup"
+        return None
+
     def backoff_jitter(self) -> float:
         """Uniform [0,1) jitter factor for the engine's retry backoff
         (seeded: replays bit-for-bit with the rest of the stream)."""
@@ -253,5 +282,7 @@ class ChaosInjector:
             "pods_lost": self.pods_lost,
             "api_faults": self.api_faults,
             "task_crashes": self.task_crashes,
+            "gateway_drops": self.gateway_drops,
+            "gateway_dups": self.gateway_dups,
             "node_downtime_s": round(self.node_downtime_s, 9),
         }

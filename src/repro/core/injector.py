@@ -48,6 +48,12 @@ GRPC_LATENCY = 0.02
 
 ARRIVAL_MODES = ("serial", "concurrent", "poisson", "trace")
 
+# v1: tenants + arrivals.  v2 adds a "gateway" section (the durable
+# gate's policy echo plus its reject/retry/shed decision log) so a
+# --trace replay is exact under backpressure.  load_trace only reads
+# "arrivals", so v1 and v2 files both replay.
+TRACE_SCHEMAS = ("arrival_trace/v1", "arrival_trace/v2")
+
 
 class WorkflowInjector:
     """The paper's serial injector: one workflow in flight at a time."""
@@ -285,8 +291,8 @@ class WorkflowGateway:
 
         self.sim.at(due, arrive, note="trace-arrival")
 
-    # -- trace capture (arrival_trace/v1) -----------------------------------
-    def record_trace(self, path: Optional[str] = None) -> dict:
+    # -- trace capture (arrival_trace/v1 + v2) ------------------------------
+    def record_trace(self, path: Optional[str] = None, gate=None) -> dict:
         """Emit the run's dispatches as an ``arrival_trace/v1`` document
         (the exact format ``load_trace`` / ``ControlPlane.add_trace`` /
         ``bench_scale --trace`` replay).  Each dispatch is recorded at
@@ -297,6 +303,12 @@ class WorkflowGateway:
         ``make`` factory must resolve it (the default factory knows the
         paper topologies).  Tenant shares (priority / weight / quota
         caps / deadline) come from the registered stream specs.
+
+        ``gate``: a ``DurableGateway`` — upgrades the document to
+        ``arrival_trace/v2``, adding the gate's policy echo and its
+        reject/retry/shed decision log (``gateway.events``) so a replay
+        under the same policy reproduces every admission decision.
+        Without a gate the schema stays ``v1`` byte-for-byte.
         """
         if not self.capture_trace and self.sent:
             raise RuntimeError("record_trace needs capture_trace=True — "
@@ -318,6 +330,10 @@ class WorkflowGateway:
             "arrivals": [{"t": t, "tenant": tenant, "topology": topo}
                          for t, tenant, topo in self.trace_log],
         }
+        if gate is not None:
+            doc["schema"] = "arrival_trace/v2"
+            doc["gateway"] = {"policy": gate.snapshot()["policy"],
+                              "events": gate.trace_events()}
         if path is not None:
             import json
             with open(path, "w") as f:

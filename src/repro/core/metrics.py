@@ -166,8 +166,12 @@ class TenantAgg:
         return self
 
     def summary_row(self, deferrals: int = 0, quota_rejects: int = 0,
-                    deadline_s: float = 0.0) -> Dict[str, float]:
-        """One ``tenant_summary`` row — same keys, same NaN semantics."""
+                    deadline_s: float = 0.0,
+                    gateway: Optional[Dict[str, int]] = None
+                    ) -> Dict[str, float]:
+        """One ``tenant_summary`` row — same keys, same NaN semantics.
+        ``gateway`` (``{"rejects", "retries", "shed"}``) adds the
+        submission-edge columns; ``None`` keeps the legacy key set."""
         row = {
             "workflows": float(self.workflows),
             "completed": float(self.completed),
@@ -184,6 +188,10 @@ class TenantAgg:
             "node_lost": float(self.node_lost),
             "rebalanced": float(self.rebalanced),
         }
+        if gateway is not None:
+            row["gateway_rejects"] = float(gateway.get("rejects", 0))
+            row["gateway_retries"] = float(gateway.get("retries", 0))
+            row["gateway_shed"] = float(gateway.get("shed", 0))
         if deadline_s > 0:
             row["deadline_s"] = deadline_s
             row["deadline_hits"] = float(self.deadline_hits)
@@ -208,6 +216,13 @@ class MetricsPartial:
     tenant_aggs: Dict[str, TenantAgg] = field(default_factory=dict)
     admission_deferrals: Dict[str, int] = field(default_factory=dict)
     quota_rejects: Dict[str, int] = field(default_factory=dict)
+    # submission-edge outcomes from the DurableGateway (ISSUE 10);
+    # gateway_active gates the extra tenant_summary columns so
+    # gateway-free runs keep the legacy key set bit-for-bit
+    gateway_active: bool = False
+    gateway_rejects: Dict[str, int] = field(default_factory=dict)
+    gateway_retries: Dict[str, int] = field(default_factory=dict)
+    gateway_shed: Dict[str, int] = field(default_factory=dict)
     tenant_deadlines: Dict[str, float] = field(default_factory=dict)
     usage: Dict[str, StepAccumulator] = field(default_factory=dict)
     usage_basis: str = "event"
@@ -225,9 +240,13 @@ class MetricsPartial:
             else:
                 mine.merge(agg)
         for src, dst in ((other.admission_deferrals, self.admission_deferrals),
-                         (other.quota_rejects, self.quota_rejects)):
+                         (other.quota_rejects, self.quota_rejects),
+                         (other.gateway_rejects, self.gateway_rejects),
+                         (other.gateway_retries, self.gateway_retries),
+                         (other.gateway_shed, self.gateway_shed)):
             for tenant, n in src.items():
                 dst[tenant] = dst.get(tenant, 0) + n
+        self.gateway_active = self.gateway_active or other.gateway_active
         self.tenant_deadlines.update(other.tenant_deadlines)
         for key, acc in other.usage.items():
             mine = self.usage.get(key)
@@ -242,7 +261,11 @@ class MetricsPartial:
             tenant: self.tenant_aggs[tenant].summary_row(
                 deferrals=self.admission_deferrals.get(tenant, 0),
                 quota_rejects=self.quota_rejects.get(tenant, 0),
-                deadline_s=self.tenant_deadlines.get(tenant, 0.0))
+                deadline_s=self.tenant_deadlines.get(tenant, 0.0),
+                gateway=({"rejects": self.gateway_rejects.get(tenant, 0),
+                          "retries": self.gateway_retries.get(tenant, 0),
+                          "shed": self.gateway_shed.get(tenant, 0)}
+                         if self.gateway_active else None))
             for tenant in sorted(self.tenant_aggs)
         }
 
@@ -370,6 +393,12 @@ class MetricsCollector:
         self.tenant_cpu_stats: Dict[str, StreamingStat] = {}
         self.admission_deferrals: Dict[str, int] = {}
         self.quota_rejects: Dict[str, int] = {}       # tenant -> count
+        # submission-edge outcomes (DurableGateway, ISSUE 10); the
+        # flag gates the extra tenant_summary columns
+        self.gateway_active = False
+        self.gateway_rejects: Dict[str, int] = {}
+        self.gateway_retries: Dict[str, int] = {}
+        self.gateway_shed: Dict[str, int] = {}
         self.tenant_deadlines: Dict[str, float] = {}  # tenant -> SLO seconds
         # chaos recovery: disruption -> replacement-create latency
         self.resched_stat = StreamingStat()
@@ -445,6 +474,19 @@ class MetricsCollector:
 
     def note_quota_reject(self, tenant: str):
         self.quota_rejects[tenant] = self.quota_rejects.get(tenant, 0) + 1
+
+    def note_gateway(self, kind: str, tenant: str):
+        d = {"reject": self.gateway_rejects,
+             "retry": self.gateway_retries,
+             "shed": self.gateway_shed}[kind]
+        d[tenant] = d.get(tenant, 0) + 1
+
+    def _gateway_row(self, tenant: str) -> Optional[Dict[str, int]]:
+        if not self.gateway_active:
+            return None
+        return {"rejects": self.gateway_rejects.get(tenant, 0),
+                "retries": self.gateway_retries.get(tenant, 0),
+                "shed": self.gateway_shed.get(tenant, 0)}
 
     def set_tenant_deadline(self, tenant: str, deadline_s: float):
         """Register the tenant's SLO: a completed workflow *hits* when
@@ -764,6 +806,10 @@ class MetricsCollector:
             tenant_aggs=self._folded_aggs(),
             admission_deferrals=dict(self.admission_deferrals),
             quota_rejects=dict(self.quota_rejects),
+            gateway_active=self.gateway_active,
+            gateway_rejects=dict(self.gateway_rejects),
+            gateway_retries=dict(self.gateway_retries),
+            gateway_shed=dict(self.gateway_shed),
             tenant_deadlines=dict(self.tenant_deadlines),
             usage=usage, usage_basis=basis,
             resched=self.resched_stat)
@@ -775,7 +821,8 @@ class MetricsCollector:
                 tenant: agg.summary_row(
                     deferrals=self.admission_deferrals.get(tenant, 0),
                     quota_rejects=self.quota_rejects.get(tenant, 0),
-                    deadline_s=self.tenant_deadlines.get(tenant, 0.0))
+                    deadline_s=self.tenant_deadlines.get(tenant, 0.0),
+                    gateway=self._gateway_row(tenant))
                 for tenant, agg in sorted(self._folded_aggs().items())
             }
         out: Dict[str, Dict[str, float]] = {}
@@ -801,6 +848,11 @@ class MetricsCollector:
                 "node_lost": float(sum(r.node_lost for r in recs)),
                 "rebalanced": float(sum(r.rebalanced for r in recs)),
             }
+            gw = self._gateway_row(tenant)
+            if gw is not None:
+                out[tenant]["gateway_rejects"] = float(gw["rejects"])
+                out[tenant]["gateway_retries"] = float(gw["retries"])
+                out[tenant]["gateway_shed"] = float(gw["shed"])
             # per-stream SLO: deadline hit-rate over *completed* runs
             # (failed/unfinished workflows are neither hit nor miss —
             # they surface in "failed"); submission -> teardown wall

@@ -155,6 +155,12 @@ class AdmissionArbiter(ResourceGatherer):
         self.preemptions = 0               # RUNNING pods evicted
         self.preemption_log: List[dict] = []
         self.max_pending = 0               # peak admission-queue depth
+        # submission-edge outcomes, fed by the DurableGateway so bench
+        # rows and tenant_summary read them here instead of reaching
+        # into gateway internals (ISSUE 10); all zero when no gate
+        self.gateway_rejects = 0
+        self.gateway_retries = 0
+        self.gateway_shed = 0
         self._seq = 0
         self._quota_active = False         # any tenant with a cap?
         self._fresh: List[AdmissionRequest] = []   # not yet deferral-checked
@@ -172,7 +178,21 @@ class AdmissionArbiter(ResourceGatherer):
                 "deferrals": self.deferrals,
                 "quota_rejects": self.quota_rejects,
                 "preemptions": self.preemptions,
-                "max_pending": self.max_pending}
+                "max_pending": self.max_pending,
+                "gateway_rejects": self.gateway_rejects,
+                "gateway_retries": self.gateway_retries,
+                "gateway_shed": self.gateway_shed}
+
+    def note_gateway(self, kind: str):
+        """Submission-edge event from the DurableGateway."""
+        if kind == "reject":
+            self.gateway_rejects += 1
+        elif kind == "retry":
+            self.gateway_retries += 1
+        elif kind == "shed":
+            self.gateway_shed += 1
+        else:
+            raise ValueError(f"unknown gateway event {kind!r}")
 
     # -- tenant registry ----------------------------------------------------
     def set_tenant(self, name: str, priority: int = 0, weight: float = 1.0,

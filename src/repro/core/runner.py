@@ -39,6 +39,7 @@ from repro.core.dag import Workflow
 from repro.core.descheduler import Descheduler, DeschedulePolicy
 from repro.core.engine import KubeAdaptorEngine
 from repro.core.events import EventRegistry
+from repro.core.gateway import BackpressurePolicy, DurableGateway
 from repro.core.informer import InformerSet
 from repro.core.injector import StreamSpec, WorkflowGateway
 from repro.core.metrics import MetricsCollector
@@ -65,6 +66,7 @@ class RunResult:
     api_calls: int
     gateway: Optional[WorkflowGateway] = None
     arbiter: Optional[AdmissionArbiter] = None
+    gate: Optional[DurableGateway] = None
     chaos: Optional[ChaosInjector] = None
     descheduler: Optional[Descheduler] = None
     autoscaler: Optional[Autoscaler] = None
@@ -91,7 +93,10 @@ class ControlPlane:
                  chaos: Optional[ChaosSchedule] = None,
                  placement: str = "first-fit",
                  deschedule: Optional[DeschedulePolicy] = None,
-                 autoscale: Optional[AutoscalePolicy] = None):
+                 autoscale: Optional[AutoscalePolicy] = None,
+                 gateway: Optional[BackpressurePolicy] = None,
+                 wal_path: Optional[str] = None,
+                 shard_index: int = 0):
         if engine_name not in ENGINES:
             raise ValueError(f"unknown engine {engine_name!r}; "
                              f"expected one of {sorted(ENGINES)}")
@@ -148,9 +153,27 @@ class ControlPlane:
             self.engine = ENGINES[engine_name](
                 self.sim, self.cluster, self.volumes, self.metrics, params)
 
-        self.gateway = WorkflowGateway(self.sim, self.engine.submit, seed=seed,
+        # durable submission front door (ISSUE 10): gateway=None is
+        # exactly the old wiring — zero events, zero draws, bit-identical
+        if wal_path is not None and gateway is None:
+            raise ValueError("wal_path requires a gateway policy")
+        self.gate: Optional[DurableGateway] = None
+        send = self.engine.submit
+        if gateway is not None:
+            self.gate = DurableGateway(self.sim, self.engine.submit, gateway,
+                                       seed=seed, shard=shard_index,
+                                       wal_path=wal_path, chaos=self.chaos,
+                                       arbiter=self.arbiter,
+                                       metrics=self.metrics)
+            self.metrics.gateway_active = True
+            send = self.gate.offer
+        self.gateway = WorkflowGateway(self.sim, send, seed=seed,
                                        capture_trace=capture_trace)
-        self.engine.on_workflow_done = self.gateway.workflow_done
+        if self.gate is not None:
+            self.gate.inner = self.gateway
+            self.engine.on_workflow_done = self.gate.workflow_done
+        else:
+            self.engine.on_workflow_done = self.gateway.workflow_done
 
         # elastic node pools (ISSUE 9): None arms nothing — zero events,
         # zero draws, the full roster stays provisioned (bit-identical).
@@ -222,6 +245,12 @@ class ControlPlane:
                         name, float(share["deadline_s"]))
         return self.gateway.load_trace(records, make)
 
+    def record_trace(self, path: Optional[str] = None):
+        """Capture the realized arrival trace; emits ``arrival_trace/v2``
+        (with gateway rejection/retry/shed events) when the durable
+        gateway is armed, ``v1`` otherwise."""
+        return self.gateway.record_trace(path, gate=self.gate)
+
     # -- execution -----------------------------------------------------------
     def run(self, horizon_s: float = 500_000.0) -> RunResult:
         if self.sample_resources:
@@ -238,7 +267,8 @@ class ControlPlane:
                          sim=self.sim, engine=self.engine,
                          api_calls=self.cluster.api_calls,
                          gateway=self.gateway, arbiter=self.arbiter,
-                         chaos=self.chaos, descheduler=self.descheduler,
+                         gate=self.gate, chaos=self.chaos,
+                         descheduler=self.descheduler,
                          autoscaler=self.autoscaler)
 
 

@@ -62,6 +62,7 @@ from repro.core import calibration as cal
 from repro.core.chaos import ChaosSchedule
 from repro.core.autoscaler import AutoscalePolicy
 from repro.core.descheduler import DeschedulePolicy
+from repro.core.gateway import BackpressurePolicy, merge_gateway_snapshots
 from repro.core.metrics import MetricsPartial
 from repro.core.runner import ControlPlane
 from repro.core.stats import StreamingStat
@@ -139,6 +140,12 @@ class ShardSpec:
     placement: str = "first-fit"              # scatter-cycle node pick
     deschedule: Optional[DeschedulePolicy] = None  # per-shard daemon
     autoscale: Optional[AutoscalePolicy] = None    # already spawned per shard
+    # durable submission front door (ISSUE 10): same frozen policy on
+    # every shard (the gate stream seed decorrelates); wal_dir arms the
+    # per-shard file sink ({wal_dir}/shard-{index}.wal) so a restarted
+    # incarnation replays its own submission log with exactly-once dedup
+    gateway: Optional[BackpressurePolicy] = None
+    wal_dir: Optional[str] = None
 
 
 def _spec_tenants(spec: ShardSpec) -> List[str]:
@@ -165,7 +172,10 @@ def _build_shard_plane(spec: ShardSpec) -> ControlPlane:
         queue=spec.queue, fold_completed=spec.fold_completed,
         capture_trace=spec.capture_trace, chaos=spec.chaos,
         placement=spec.placement, deschedule=spec.deschedule,
-        autoscale=spec.autoscale)
+        autoscale=spec.autoscale, gateway=spec.gateway,
+        wal_path=(os.path.join(spec.wal_dir, f"shard-{spec.index}.wal")
+                  if spec.wal_dir and spec.gateway is not None else None),
+        shard_index=spec.index)
     for stream in spec.streams:
         plane.add_stream(**stream)
     if spec.trace_records:
@@ -173,17 +183,24 @@ def _build_shard_plane(spec: ShardSpec) -> ControlPlane:
     return plane
 
 
-def _run_shard(spec: ShardSpec) -> dict:
+def _run_shard(spec: ShardSpec, die_at: Optional[float] = None) -> dict:
     """Build, run, and compact one shard.  Runs in a forked worker
     (``processes=True``) or inline (``processes=False``) — identical
     code path either way, so the two modes are bit-identical by
-    construction for everything the sim computes."""
+    construction for everything the sim computes.
+
+    ``die_at`` (forked test hook, REPRO_SHARD_KILL=<i>@<t>): hard-exit
+    at virtual time ``t`` — a mid-run SIGKILL that leaves a partially
+    written WAL behind for the restarted incarnation to replay."""
     import resource as _resource
     import time as _time
 
     import repro.core.cluster as _cluster_mod
 
     plane = _build_shard_plane(spec)
+    if die_at is not None:
+        plane.sim.at(die_at, lambda: os._exit(42), daemon=True,
+                     note="test:shard-kill")
 
     bindings: List[Tuple[str, str]] = []
     if spec.record_bindings:
@@ -252,6 +269,9 @@ def _run_shard(spec: ShardSpec) -> dict:
         "cost": res.cluster.cost_summary(),
         "autoscaler": (res.autoscaler.counters()
                        if res.autoscaler is not None else None),
+        # durable front door (ISSUE 10): per-shard qstat snapshot
+        # (merged exactly by ShardedRunResult.gateway_summary)
+        "gateway": (res.gate.snapshot() if res.gate is not None else None),
         # per-process high-water mark: each worker process runs exactly
         # one shard, so this is the shard's own RSS
         "peak_rss_mib": _resource.getrusage(
@@ -261,6 +281,8 @@ def _run_shard(spec: ShardSpec) -> dict:
         "profile": profile_text,
         "bindings": bindings if spec.record_bindings else None,
     }
+    if res.gate is not None:
+        res.gate.close()
     return record
 
 
@@ -274,12 +296,15 @@ def _shard_worker_main(spec: ShardSpec, conn, heartbeat_s: float,
     so beats flow while the shard computes).  The shard's result or a
     serialized exception goes back over the same pipe — the parent
     never blocks on a silent worker again.  ``die`` is the test hook
-    (REPRO_SHARD_KILL): hard-exit before running, simulating SIGKILL.
+    (REPRO_SHARD_KILL): ``True`` hard-exits before running (simulated
+    SIGKILL at launch); a float hard-exits at that virtual time
+    mid-run (the WAL-replay crash scenario).
     """
     import threading
     import traceback as _traceback
 
-    if die:
+    die_at = die if isinstance(die, float) else None
+    if die is True:
         os._exit(42)
 
     lock = threading.Lock()
@@ -295,7 +320,7 @@ def _shard_worker_main(spec: ShardSpec, conn, heartbeat_s: float,
 
     threading.Thread(target=beat, daemon=True).start()
     try:
-        record = _run_shard(spec)
+        record = _run_shard(spec, die_at=die_at)
     except BaseException as exc:
         stop.set()
         with lock:
@@ -388,6 +413,11 @@ class ShardedRunResult:
     def peak_pending_admission(self) -> int:
         return max((s["arbiter"].get("max_pending", 0)
                     for s in self.shards), default=0)
+
+    @property
+    def peak_pending_gateway(self) -> int:
+        return max((s["gateway"]["peak_pending"]
+                    for s in self.shards if s.get("gateway")), default=0)
 
     @property
     def peak_shard_rss_mib(self) -> float:
@@ -522,6 +552,14 @@ class ShardedRunResult:
             out[nk] = a[3]
         return out
 
+    def gateway_summary(self) -> dict:
+        """Merged qstat snapshot across shards (empty dict when no
+        shard armed a gateway) — exact by construction: counters and
+        gauges sum over the disjoint tenant partition, per-shard peaks
+        and the retry horizon take the max."""
+        return merge_gateway_snapshots(
+            s.get("gateway") for s in self.shards)
+
     def recovery_summary(self) -> Dict[str, float]:
         """Merged disruption/recovery accounting (see
         ``MetricsPartial.recovery_summary``)."""
@@ -583,6 +621,8 @@ class ShardedControlPlane:
                  placement: str = "first-fit",
                  deschedule: Optional[DeschedulePolicy] = None,
                  autoscale: Optional[AutoscalePolicy] = None,
+                 gateway: Optional[BackpressurePolicy] = None,
+                 wal_dir: Optional[str] = None,
                  on_shard_failure: str = "raise",
                  shard_timeout_s: Optional[float] = None,
                  heartbeat_s: float = 2.0,
@@ -597,6 +637,8 @@ class ShardedControlPlane:
             raise ValueError(f"unknown on_shard_failure "
                              f"{on_shard_failure!r}; expected "
                              f"'raise', 'restart', or 'degrade'")
+        if wal_dir is not None and gateway is None:
+            raise ValueError("wal_dir requires a gateway policy")
         self.workers = workers
         self.processes = processes
         self.shard_procs = shard_procs
@@ -620,7 +662,8 @@ class ShardedControlPlane:
             chaos=chaos.spawn(i) if chaos is not None else None,
             placement=placement, deschedule=deschedule,
             autoscale=(autoscale.spawn(i, workers)
-                       if autoscale is not None else None))
+                       if autoscale is not None else None),
+            gateway=gateway, wal_dir=wal_dir)
             for i in range(workers)]
 
     # -- tenancy knobs (ControlPlane API, routed by tenant hash) ----------
@@ -731,6 +774,8 @@ class ShardedControlPlane:
         ctx = mp.get_context("fork")
         wave = min(self.shard_procs or os.cpu_count() or 1, self.workers)
         kill_env = os.environ.get("REPRO_SHARD_KILL")
+        kill_shard, _, _kill_t = (kill_env or "").partition("@")
+        kill_at = float(_kill_t) if _kill_t else None
         deadline = (_time.monotonic() + self.shard_timeout_s
                     if self.shard_timeout_s is not None else None)
 
@@ -742,10 +787,14 @@ class ShardedControlPlane:
 
         def launch(i: int) -> None:
             parent, child = ctx.Pipe(duplex=False)
-            # REPRO_SHARD_KILL=<index> (test hook): the shard's first
-            # incarnation hard-exits pre-run — a simulated SIGKILL.
-            # Restarted incarnations survive, so restart is testable.
-            die = kill_env == str(i) and not restarts.get(i)
+            # REPRO_SHARD_KILL=<index>[@<t>] (test hook): the shard's
+            # first incarnation hard-exits — pre-run (simulated SIGKILL
+            # at launch), or at virtual time <t> mid-run (leaving a
+            # torn WAL for the restart to replay).  Restarted
+            # incarnations survive, so restart is testable.
+            die: object = kill_shard == str(i) and not restarts.get(i)
+            if die and kill_at is not None:
+                die = kill_at
             proc = ctx.Process(target=_shard_worker_main,
                                args=(self.specs[i], child,
                                      self.heartbeat_s, die))
